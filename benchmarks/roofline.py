@@ -1,0 +1,109 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Reads reports/dryrun/*.json (produced by repro.launch.dryrun) and derives
+the three roofline terms per (arch x shape) cell on the single-pod mesh:
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+plus MODEL_FLOPS = 6*N(_active)*D and the usefulness ratio
+MODEL_FLOPS / (HLO_FLOPs_per_device * chips), which catches remat/dispatch/
+masked-tile waste.
+
+Hardware constants (TPU v5e-class target, per assignment):
+    197 TFLOP/s bf16 per chip; 819 GB/s HBM; ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def load_cells(report_dir: str = "reports/dryrun",
+               mesh: str = "single") -> List[Dict]:
+    cells = []
+    for p in sorted(glob.glob(os.path.join(report_dir, f"*__{mesh}.json"))):
+        with open(p) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def roofline_row(cell: Dict) -> Optional[Dict]:
+    if not cell.get("ok"):
+        return {"arch": cell["arch"], "shape": cell["shape"],
+                "skip": cell.get("reason") or cell.get("error", "failed")}
+    n_dev = cell["n_devices"]
+    fl = cell["hlo_flops_per_device"]
+    # memory numerator: bytes materialized (writes, trip-count-scaled) +
+    # argument bytes (params/opt/KV-cache read once per step from HBM)
+    by = cell["hlo_bytes_per_device"] + cell.get("memory", {}).get(
+        "argument_size_in_bytes", 0)
+    coll = cell["collectives"]["total_bytes"]
+    t_c = fl / PEAK_FLOPS
+    t_m = by / HBM_BW if by > 0 else 0.0
+    t_x = coll / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dom = max(terms, key=terms.get)
+    total_hlo = fl * n_dev
+    ratio = cell["model_flops"] / total_hlo if total_hlo else 0.0
+    bound = max(terms.values())
+    frac = (cell["model_flops"] / n_dev / PEAK_FLOPS) / bound if bound else 0.0
+    return {
+        "arch": cell["arch"], "shape": cell["shape"], "kind": cell["kind"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom,
+        "model_flops": cell["model_flops"],
+        "useful_ratio": ratio,
+        "roofline_fraction": min(frac, 1.0),
+        "collectives": {k: v for k, v in cell["collectives"].items()
+                        if isinstance(v, dict) and v["count"]},
+    }
+
+
+def format_report(report_dir: str = "reports/dryrun") -> str:
+    rows = [roofline_row(c) for c in load_cells(report_dir)]
+    out = ["### Roofline per (arch x shape), single-pod 16x16 mesh",
+           "| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "dominant | useful FLOPs ratio | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r is None:
+            continue
+        if "skip" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"SKIP ({r['skip'][:60]}) | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.2f} |")
+    return "\n".join(out)
+
+
+def interesting_cells(report_dir: str = "reports/dryrun", k: int = 3):
+    """The hillclimb picks: worst roofline fraction, most collective-bound,
+    most representative of the paper's serving regime (decode)."""
+    rows = [r for r in (roofline_row(c) for c in load_cells(report_dir))
+            if r and "skip" not in r]
+    if not rows:
+        return []
+    worst = min(rows, key=lambda r: r["roofline_fraction"])
+    coll = max(rows, key=lambda r: r["collective_s"] /
+               max(r["compute_s"], 1e-12))
+    decode = [r for r in rows if r["kind"] == "decode"]
+    rep = max(decode, key=lambda r: r["model_flops"]) if decode else rows[0]
+    picks, seen = [], set()
+    for r in (worst, coll, rep):
+        key = (r["arch"], r["shape"])
+        if key not in seen:
+            seen.add(key)
+            picks.append(r)
+    return picks[:k]

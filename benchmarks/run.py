@@ -1,0 +1,91 @@
+"""Benchmark harness — one function per paper table. Prints the ours-vs-paper
+tables and a machine-readable ``name,us_per_call,derived`` CSV summary.
+
+    PYTHONPATH=src python -m benchmarks.run [--seed N] [--skip-roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks import context as ctx_bench
+from benchmarks import scheduling as sched_bench
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    csv_lines = ["name,us_per_call,derived"]
+
+    print("=" * 72)
+    print("AgentRM benchmarks — scheduling (paper Tables I-V)")
+    print("=" * 72)
+    for name, fn in [("normal", sched_bench.normal),
+                     ("high_load", sched_bench.high_load),
+                     ("burst", sched_bench.burst),
+                     ("faulty", sched_bench.faulty),
+                     ("cascade", sched_bench.cascade)]:
+        rows, us = fn(seed=args.seed)
+        print()
+        print(sched_bench.format_table(name, rows))
+        mlfq = next(r for r in rows if r["Method"] == "AgentRM-MLFQ")
+        fifo = next(r for r in rows if r["Method"] == "FIFO")
+        for r in rows:
+            csv_lines.append(
+                f"sched_{name}_{r['Method'].replace(' ', '_')},{us:.1f},"
+                f"p95_ms={r['P95 (ms)']}")
+        csv_lines.append(
+            f"sched_{name}_p95_reduction,{us:.1f},"
+            f"{1 - mlfq['P95 (ms)'] / max(fifo['P95 (ms)'], 1):.3f}")
+
+    print()
+    print("=" * 72)
+    print("AgentRM benchmarks — context management (paper Tables VI-IX)")
+    print("=" * 72)
+    for name, fn in [("50_turn", ctx_bench.fifty_turn),
+                     ("100_turn", ctx_bench.hundred_turn),
+                     ("200_turn", ctx_bench.two_hundred_turn),
+                     ("multi_topic", ctx_bench.multi_topic)]:
+        rows, us = fn(seed=args.seed)
+        print()
+        print(ctx_bench.format_table(name, rows))
+        for r in rows:
+            csv_lines.append(
+                f"ctx_{name}_{r['Method']},{us:.1f},"
+                f"retention={r['retention']:.3f};quality={r['quality']:.2f};"
+                f"cost={r['compact_cost']}")
+
+    if not args.skip_roofline:
+        import os
+        rdir = "reports/dryrun_v3" if os.path.isdir("reports/dryrun_v3") \
+            else "reports/dryrun"
+        if os.path.isdir(rdir) and os.listdir(rdir):
+            from benchmarks import roofline
+            print()
+            print("=" * 72)
+            print("Roofline (from dry-run artifacts; see EXPERIMENTS.md)")
+            print("=" * 72)
+            print(roofline.format_report(rdir))
+            for r in roofline.interesting_cells(rdir):
+                csv_lines.append(
+                    f"roofline_{r['arch']}_{r['shape']},0.0,"
+                    f"dominant={r['dominant']};frac={r['roofline_fraction']:.2f}")
+        else:
+            print("\n[roofline] no dry-run artifacts found — run "
+                  "PYTHONPATH=src python -m repro.launch.dryrun first")
+
+    print()
+    print("=" * 72)
+    print("CSV summary")
+    print("=" * 72)
+    for line in csv_lines:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

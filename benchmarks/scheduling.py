@@ -1,0 +1,99 @@
+"""Scheduling benchmarks — paper Tables I–V + Figs 2–4.
+
+Each function runs the four schedulers over one scenario on the virtual
+clock and returns rows in the paper's column format, with the paper's
+numbers attached for side-by-side comparison in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+from repro.core.scheduler import SCENARIOS, make_turns, run_policy
+
+POLICIES = ["FIFO", "Round Robin", "Priority Queue", "AgentRM-MLFQ"]
+_POLICY_KEY = {"FIFO": "FIFO", "Round Robin": "RR",
+               "Priority Queue": "PQ", "AgentRM-MLFQ": "MLFQ"}
+
+# paper values: (P95 ms, tput/min, zombies, avg hold s, waste s, recovered,
+#                starved, lags>30s)
+PAPER: Dict[str, Dict[str, tuple]] = {
+    "normal": {
+        "FIFO": (70008, 5.6, 1, 80.5, 81, 0, 2, 6),
+        "Round Robin": (134000, 5.4, 1, 80.5, 81, 0, 13, 18),
+        "Priority Queue": (70008, 5.6, 1, 80.5, 81, 0, 2, 6),
+        "AgentRM-MLFQ": (4495, 5.6, 0, 0.0, 0, 1, 0, 0)},
+    "high_load": {
+        "FIFO": (640439, 14.6, 29, 78.3, 2272, 0, 274, 277),
+        "Round Robin": (764539, 14.9, 29, 78.3, 2272, 0, 276, 278),
+        "Priority Queue": (658744, 14.5, 29, 78.3, 2272, 0, 220, 238),
+        "AgentRM-MLFQ": (323001, 24.5, 7, 20.0, 140, 22, 0, 269)},
+    "burst": {
+        "FIFO": (50431, 31.8, 1, 33.8, 34, 0, 0, 10),
+        "Round Robin": (44963, 25.8, 1, 33.8, 34, 0, 0, 9),
+        "Priority Queue": (51844, 32.0, 1, 33.8, 34, 0, 0, 9),
+        "AgentRM-MLFQ": (47058, 31.9, 0, 0.0, 0, 2, 0, 8)},
+    "faulty": {
+        "FIFO": (562771, 4.1, 20, 122.1, 2441, 0, 55, 61),
+        "Round Robin": (558857, 4.0, 20, 122.1, 2441, 0, 55, 60),
+        "Priority Queue": (562771, 4.1, 20, 122.1, 2441, 0, 55, 61),
+        "AgentRM-MLFQ": (77524, 11.0, 5, 19.4, 97, 15, 0, 38)},
+    "cascade": {
+        "FIFO": (90236, 13.0, 15, 66.4, 996, 0, 7, 67),
+        "Round Robin": (269569, 10.7, 15, 66.4, 996, 0, 81, 123),
+        "Priority Queue": (93376, 13.1, 15, 66.4, 996, 0, 8, 64),
+        "AgentRM-MLFQ": (43190, 14.4, 4, 20.0, 80, 21, 0, 22)},
+}
+
+TABLE_OF = {"normal": "Table I", "high_load": "Table II",
+            "burst": "Table III", "faulty": "Table IV",
+            "cascade": "Table V"}
+
+
+def run_scenario(name: str, seed: int = 0) -> Tuple[List[dict], float]:
+    scn = SCENARIOS[name]
+    rows = []
+    t0 = time.perf_counter()
+    for pol in POLICIES:
+        m = run_policy(_POLICY_KEY[pol], make_turns(scn, seed=seed),
+                       lanes=scn.lanes, seed=seed)
+        r = m.row()
+        r["Method"] = pol
+        r["paper"] = PAPER[name][pol]
+        rows.append(r)
+    return rows, (time.perf_counter() - t0) * 1e6 / (4 * scn.n_turns)
+
+
+def normal(seed=0):
+    return run_scenario("normal", seed)
+
+
+def high_load(seed=0):
+    return run_scenario("high_load", seed)
+
+
+def burst(seed=0):
+    return run_scenario("burst", seed)
+
+
+def faulty(seed=0):
+    return run_scenario("faulty", seed)
+
+
+def cascade(seed=0):
+    return run_scenario("cascade", seed)
+
+
+def format_table(name: str, rows: List[dict]) -> str:
+    hdr = ["Method", "P95 (ms)", "Tput (/min)", "Zombies", "Avg Hold (s)",
+           "Lane Waste (s)", "Recovered", "Starved", "Lags>30s"]
+    out = [f"### {TABLE_OF[name]} — {name} scenario (ours vs paper)"]
+    out.append("| " + " | ".join(hdr) + " |")
+    out.append("|" + "---|" * len(hdr))
+    for r in rows:
+        cells = [str(r["Method"])] + [str(r[h]) for h in hdr[1:]]
+        out.append("| " + " | ".join(cells) + " |")
+        p = r["paper"]
+        out.append(f"| ^paper | {p[0]} | {p[1]} | {p[2]} | {p[3]} | {p[4]} | "
+                   f"{p[5]} | {p[6]} | {p[7]} |")
+    return "\n".join(out)

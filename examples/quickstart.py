@@ -1,0 +1,76 @@
+"""Quickstart: AgentRM middleware over a toy backend in ~60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Shows the paper's full loop: turns -> MLFQ -> lanes -> responses, a hanging
+turn being reaped, and the CLM keeping a key fact across compaction.
+"""
+import sys
+import threading
+import time
+
+sys.path.insert(0, "src")
+
+from repro.core import AgentRM, AgentRMConfig, ModelBackend, ZombieKilled
+from repro.core.context.message import Message
+from repro.core.scheduler.task import QueueClass
+
+
+class ToyBackend(ModelBackend):
+    """Echoes prompts; 'HANG' prompts stall without heartbeating."""
+
+    def generate(self, agent_id, context, prompt, heartbeat, cancelled):
+        if "HANG" in prompt:
+            t0 = time.monotonic()
+            while time.monotonic() - t0 < 30:      # stuck tool call
+                if cancelled.is_set():
+                    raise ZombieKilled("reaped")
+                time.sleep(0.02)
+        for _ in range(3):
+            heartbeat()
+            time.sleep(0.01)
+        return f"echo({len(context)} ctx chars): {prompt}"
+
+
+def main():
+    rm = AgentRM(ToyBackend(), AgentRMConfig(
+        lanes=2, detect_after_s=0.5, reaper_period_s=0.2,
+        max_retries=1, recover_p=0.0, seed=0))
+
+    # 1) normal scheduling: interactive beats background
+    h_bg = rm.submit("builder", "compile the project",
+                     queue_class=QueueClass.BACKGROUND)
+    h_ui = rm.submit("user", "what's the status?",
+                     queue_class=QueueClass.INTERACTIVE)
+    print("[ui]", h_ui.result(10))
+    print("[bg]", h_bg.result(10))
+
+    # 2) a zombie gets reaped, the lane comes back
+    h_zombie = rm.submit("user", "HANG on this tool call")
+    h_after = rm.submit("user", "still responsive?")
+    print("[after]", h_after.result(10))
+    try:
+        h_zombie.result(15)
+    except ZombieKilled as e:
+        print("[zombie] reaped:", e)
+    print("[monitor]", rm.monitor.snapshot().zombies_reaped, "zombie(s) reaped")
+
+    # 3) the CLM keeps key facts through compaction
+    clm = rm.context_for("user")
+    clm.limit = 400
+    clm.cfg = clm.cfg.__class__(limit_tokens=400, physical_tokens=1600)
+    clm.add(Message(role="user", turn=1, kind="decision", is_key=True,
+                    key_fact="FACT-apikey",
+                    text="DECISION: use FACT-apikey for deploys"))
+    for i in range(40):
+        clm.add(Message(role="assistant", turn=i + 2,
+                        text="filler chatter " * 12))
+    assert clm.contains_fact("FACT-apikey"), "key fact lost!"
+    print("[clm] key fact retained through compaction; window =",
+          clm.window_tokens, "tokens;", clm.psi_message()[:60])
+    rm.shutdown()
+    print("quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Gemma-2B [arXiv:2403.08295; hf].
+
+18L d_model=2048 8H d_ff=16384 vocab=256000; GeGLU, head_dim=256, MQA (kv=1).
+Embeddings tied and scaled by sqrt(d_model) per the Gemma reference.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-2b",
+    family="dense",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab_size=256000,
+    act="gelu",                     # GeGLU
+    rope_theta=10000.0,
+    tie_embeddings=True,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.replace(n_layers=2, d_model=64, n_heads=4, n_kv_heads=1,
+                          head_dim=16, d_ff=128, vocab_size=256)

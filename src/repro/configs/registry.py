@@ -1,0 +1,94 @@
+"""Architecture registry: ``--arch <id>`` lookup + input ShapeDtypeStructs.
+
+``input_specs(cfg, shape)`` returns weak-type-correct ShapeDtypeStruct
+stand-ins for every model input (no device allocation) — the dry-run lowers
+against these. Modality frontends (whisper audio conv, llava vision tower)
+are STUBS: their precomputed embeddings appear here as inputs.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ModelConfig, ShapeConfig, SHAPES,
+                                SHAPES_BY_NAME, shape_applicable)
+
+_ARCH_MODULES = {
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "llama4-scout-17b-a16e": "repro.configs.llama4_scout_17b_a16e",
+    "starcoder2-7b": "repro.configs.starcoder2_7b",
+    "deepseek-67b": "repro.configs.deepseek_67b",
+    "gemma-2b": "repro.configs.gemma_2b",
+    "chatglm3-6b": "repro.configs.chatglm3_6b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "llava-next-mistral-7b": "repro.configs.llava_next_mistral_7b",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "mamba2-370m": "repro.configs.mamba2_370m",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch]).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return importlib.import_module(_ARCH_MODULES[arch]).smoke_config()
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for one (arch x shape) cell.
+
+    train:   {tokens, labels[, frame_embeds | patch_embeds]}
+    prefill: {tokens[, frame_embeds | patch_embeds]}
+    decode:  {token, cache_len, <session state>} — the KV/SSM cache specs are
+             produced by the serving layer (repro.serving.session_state) and
+             merged by the launcher; here we return only the token streams.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    ct = jnp.dtype(cfg.compute_dtype)
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind == "train":
+        text = s
+        if cfg.family == "vlm":
+            text = s - cfg.n_image_tokens
+            specs["patch_embeds"] = _sds((b, cfg.n_image_tokens, cfg.d_model), ct)
+        if cfg.is_encoder_decoder:
+            specs["frame_embeds"] = _sds((b, cfg.enc_len, cfg.d_model), ct)
+        specs["tokens"] = _sds((b, text), jnp.int32)
+        specs["labels"] = _sds((b, text), jnp.int32)
+    elif shape.kind == "prefill":
+        text = s
+        if cfg.family == "vlm":
+            text = s - cfg.n_image_tokens
+            specs["patch_embeds"] = _sds((b, cfg.n_image_tokens, cfg.d_model), ct)
+        if cfg.is_encoder_decoder:
+            specs["frame_embeds"] = _sds((b, cfg.enc_len, cfg.d_model), ct)
+        specs["tokens"] = _sds((b, text), jnp.int32)
+    else:  # decode: one new token against a seq_len-deep session state
+        specs["token"] = _sds((b, 1), jnp.int32)
+        specs["cache_len"] = _sds((), jnp.int32)
+    return specs
+
+
+def iter_cells():
+    """Yield every (arch, shape, applicable, why) assignment cell — 40 total."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, why = shape_applicable(cfg, shape)
+            yield arch, shape, ok, why
+
+
+__all__ = ["ARCH_IDS", "get_config", "get_smoke_config", "input_specs",
+           "iter_cells", "SHAPES", "SHAPES_BY_NAME"]

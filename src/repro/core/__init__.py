@@ -1,0 +1,13 @@
+"""AgentRM core: the paper's contribution.
+
+  repro.core.scheduler  — MLFQ + zombie reaper + rate limits + DRF (+ sim)
+  repro.core.context    — Context Lifecycle Manager + baselines
+  repro.core.monitor    — resource monitor
+  repro.core.middleware — deployable middleware facade over a model backend
+"""
+from repro.core.middleware import (AgentRM, AgentRMConfig, ModelBackend,
+                                   TurnHandle, ZombieKilled)
+from repro.core.monitor import MonitorSnapshot, ResourceMonitor
+
+__all__ = ["AgentRM", "AgentRMConfig", "ModelBackend", "TurnHandle",
+           "ZombieKilled", "MonitorSnapshot", "ResourceMonitor"]

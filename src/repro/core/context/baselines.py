@@ -1,0 +1,119 @@
+"""Baseline context-management strategies (paper §VI.A):
+
+  NoManagement — ignores the configured limit; the *physical* model window
+      hard-truncates the oldest history on overflow (the paper's "unexpected
+      truncation" failure mode).
+  FIFOTruncation — enforces the configured limit by dropping oldest.
+  SlidingWindow — keeps only the most recent K messages.
+  MemGPTStyle — main context + archival store; on pressure, evicts the oldest
+      batch, folding it into a single recursive summary with a fixed budget
+      (older details fall out as the summary re-merges — the paper's 65-85%
+      retention behaviour emerges from exactly this).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core.context.message import (Entry, Message, Summary,
+                                        window_tokens)
+from repro.core.context.summarizer import Summarizer
+from repro.core.context.tiers import ColdStore
+
+
+class ContextStrategy:
+    name = "base"
+
+    def __init__(self, limit_tokens: int = 50_000,
+                 physical_tokens: int = 100_000):
+        self.limit = limit_tokens
+        self.physical = physical_tokens
+        self.entries: List[Entry] = []
+        self.summarizer = Summarizer()
+        self.truncation_events = 0
+
+    def add(self, msg: Message):
+        raise NotImplementedError
+
+    def window(self) -> List[Entry]:
+        return list(self.entries)
+
+    @property
+    def window_tokens(self) -> int:
+        return window_tokens(self.entries)
+
+    @property
+    def compaction_cost(self) -> int:
+        return self.summarizer.cost_tokens
+
+    def contains_fact(self, fact: str) -> bool:
+        return any(fact in e.text for e in self.entries)
+
+
+class NoManagement(ContextStrategy):
+    name = "No Management"
+    overflow_keep = 0.5            # physical truncation keeps this fraction
+
+    def add(self, msg: Message):
+        self.entries.append(msg)
+        if self.window_tokens > self.physical:
+            # the model API silently drops oldest history
+            self.truncation_events += 1
+            target = int(self.physical * self.overflow_keep)
+            while self.window_tokens > target and len(self.entries) > 1:
+                self.entries.pop(0)
+
+
+class FIFOTruncation(ContextStrategy):
+    name = "FIFO Truncation"
+
+    def add(self, msg: Message):
+        self.entries.append(msg)
+        while self.window_tokens > self.limit and len(self.entries) > 1:
+            self.entries.pop(0)
+            self.truncation_events += 1
+
+
+class SlidingWindow(ContextStrategy):
+    name = "Sliding Window"
+    keep_messages = 56
+
+    def add(self, msg: Message):
+        self.entries.append(msg)
+        while len(self.entries) > self.keep_messages:
+            self.entries.pop(0)
+
+
+class MemGPTStyle(ContextStrategy):
+    name = "MemGPT-style"
+    evict_at = 0.75                 # of limit
+    evict_fraction = 0.30           # oldest messages per eviction
+    summary_budget = 700            # recursive-summary token budget
+
+    def __init__(self, limit_tokens: int = 50_000,
+                 physical_tokens: int = 100_000):
+        super().__init__(limit_tokens, physical_tokens)
+        self.summarizer = Summarizer(ratio=0.25)
+        self.archival = ColdStore()
+        self.running_summary: Summary | None = None
+
+    def add(self, msg: Message):
+        self.entries.append(msg)
+        if self.window_tokens <= self.limit * self.evict_at:
+            return
+        self.truncation_events += 1
+        msgs = [e for e in self.entries if isinstance(e, Message)]
+        n_evict = max(1, int(len(msgs) * self.evict_fraction))
+        victims = msgs[:n_evict]
+        for v in victims:
+            self.archival.append(v)
+            self.entries.remove(v)
+        batch = self.summarizer.summarize(victims,
+                                          budget_tokens=self.summary_budget)
+        if self.running_summary is None:
+            self.running_summary = batch
+        else:
+            if self.running_summary in self.entries:
+                self.entries.remove(self.running_summary)
+            self.running_summary = self.summarizer.merge(
+                self.running_summary, batch, self.summary_budget)
+        self.entries.insert(0, self.running_summary)

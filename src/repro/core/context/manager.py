@@ -1,0 +1,216 @@
+"""AgentRM Context Lifecycle Manager (paper §IV.C).
+
+Adaptive compaction (Algorithm 2) over a value score
+    v(m) = alpha*recency(m) + beta*importance(m) + gamma*key_info_bonus(m)
+with "compress don't discard": important victims are replaced in-window by
+high-fidelity extractive summaries (ratio 0.5 — all key lines survive) and
+also persisted to Tier-1 warm storage; unimportant victims go to Tier-2 cold.
+Context faults (`recall`) promote content back from T1/T2 with simulated
+access latency. Hibernation serialises the whole session.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+from repro.core.context.baselines import ContextStrategy
+from repro.core.context.message import (Entry, KEY_MARKERS, Message, Summary,
+                                        window_tokens)
+from repro.core.context.psi import PressureGauge
+from repro.core.context.summarizer import Summarizer
+from repro.core.context.tiers import (ColdStore, T1_ACCESS_LATENCY_S,
+                                      T2_ACCESS_LATENCY_S, WarmStore)
+
+
+@dataclass
+class CLMConfig:
+    limit_tokens: int = 50_000
+    physical_tokens: int = 100_000
+    compact_at: float = 0.82        # hysteresis: trigger
+    compact_to: float = 0.66        # hysteresis: target
+    alpha: float = 0.30             # recency weight
+    beta: float = 0.40              # importance weight
+    gamma: float = 0.30             # key-info bonus weight
+    recency_tau: float = 40.0       # messages
+    important_cut: float = 0.60     # individual- (vs batch-) compress cut
+    summary_ratio: float = 0.50     # high-fidelity extractive budget
+    batch_ratio: float = 0.12       # low-value batch compression budget
+    batch_emit_tokens: int = 3000   # flush batch accumulator at this size
+    psi_inject: bool = True
+
+
+class ContextLifecycleManager(ContextStrategy):
+    name = "AgentRM-CLM"
+
+    def __init__(self, limit_tokens: int = 50_000,
+                 physical_tokens: int = 100_000,
+                 cfg: Optional[CLMConfig] = None,
+                 warm_path: Optional[str] = None,
+                 cold_path: Optional[str] = None):
+        super().__init__(limit_tokens, physical_tokens)
+        self.cfg = cfg or CLMConfig(limit_tokens=limit_tokens,
+                                    physical_tokens=physical_tokens)
+        self.summarizer = Summarizer(ratio=self.cfg.summary_ratio)
+        self.warm = WarmStore(warm_path)
+        self.cold = ColdStore(cold_path)
+        self.gauge = PressureGauge()
+        self._clock = 0             # message counter (recency basis)
+        self.faults = 0
+        self.fault_latency_s = 0.0
+
+    # ------------------------------------------------------------ value
+    def value(self, e: Entry) -> float:
+        c = self.cfg
+        age = self._clock - e.turn
+        recency = math.exp(-max(age, 0) / c.recency_tau)
+        key_bonus = 1.0 if any(m in e.text for m in KEY_MARKERS) else 0.0
+        return c.alpha * recency + c.beta * e.importance + c.gamma * key_bonus
+
+    # ------------------------------------------------------------- add
+    def add(self, msg: Message):
+        self._clock = max(self._clock, msg.turn)
+        self.cold.append(msg)                     # write-ahead to T2
+        self.entries.append(msg)
+        self.gauge.update(self.window_tokens / self.limit)
+        trigger = self.cfg.compact_at * self.limit
+        if self.window_tokens > trigger or self.gauge.some10 > 0.95:
+            self.compact()
+
+    # ------------------------------------------------- Algorithm 2 loop
+    def compact(self):
+        """Adaptive compaction: evict lowest-v(m) first; important victims
+        are compressed individually at high fidelity, low-value victims are
+        folded into cheap batch summaries (compress-don't-discard, the zswap
+        analogy) — nothing leaves T0 without a trace."""
+        target = int(self.cfg.compact_to * self.limit)
+        self.truncation_events += 1
+        pending: List[Message] = []
+
+        def flush_batch():
+            if not pending:
+                return
+            in_tok = sum(m.tokens for m in pending)
+            s = self.summarizer.summarize(
+                pending, budget_tokens=max(
+                    12, int(in_tok * self.cfg.batch_ratio)))
+            self.entries.insert(self._insert_at(pending[0]), s)
+            self.warm.put_summary(s)
+            pending.clear()
+
+        while self.window_tokens > target and len(self.entries) > 4:
+            # never evict the very newest context — pick the lowest-value
+            # entry among the rest (picking global-min and breaking on the
+            # newest can stall compaction entirely)
+            victim = min(self.entries[:-1], key=self.value)
+            self.entries.remove(victim)
+            if isinstance(victim, Summary):
+                self.warm.put_summary(victim)     # demote T0 summary -> T1
+                continue
+            if victim.importance >= self.cfg.important_cut or victim.is_key:
+                s = self.summarizer.summarize([victim])
+                self.entries.insert(self._insert_at(victim), s)
+                self.warm.put_summary(s)
+                self.warm.put_message(victim)
+            else:
+                pending.append(victim)
+                if sum(m.tokens for m in pending) >= self.cfg.batch_emit_tokens:
+                    flush_batch()
+        flush_batch()
+
+    def _insert_at(self, victim: Message) -> int:
+        for i, e in enumerate(self.entries):
+            if e.turn > victim.turn:
+                return i
+        return len(self.entries)
+
+    # ----------------------------------------------------- context fault
+    def recall(self, needle: str) -> Tuple[Optional[str], float]:
+        """Fault handler: search T0, then T1 (warm), then T2 (cold);
+        promote a hit into the window. Returns (text, simulated latency)."""
+        for e in self.entries:
+            if needle in e.text:
+                return e.text, 0.0
+        self.faults += 1
+        rows = self.warm.search(needle)
+        if rows:
+            text = rows[0][4]
+            self.entries.append(Summary(
+                text=f"[recalled:T1] {text}", source_mids={rows[0][0]},
+                turn=self._clock))
+            self.fault_latency_s += T1_ACCESS_LATENCY_S
+            return text, T1_ACCESS_LATENCY_S
+        recs = self.cold.scan(needle)
+        if recs:
+            text = recs[0]["text"]
+            self.entries.append(Summary(
+                text=f"[recalled:T2] {text}", source_mids={recs[0]['mid']},
+                turn=self._clock))
+            self.fault_latency_s += T2_ACCESS_LATENCY_S
+            return text, T2_ACCESS_LATENCY_S
+        return None, T2_ACCESS_LATENCY_S
+
+    def contains_fact(self, fact: str) -> bool:
+        """Key info is 'retained' if findable without a cold scan: active
+        window or warm (T1) summaries/messages."""
+        if any(fact in e.text for e in self.entries):
+            return True
+        return bool(self.warm.search(fact, limit=1))
+
+    # -------------------------------------------------------------- PSI
+    def psi_message(self) -> str:
+        return self.gauge.render(self.window_tokens, self.limit)
+
+    # ------------------------------------------------------- hibernation
+    def hibernate(self, path: str):
+        """CRIU-style: serialise complete session state to one JSON file."""
+        state = {
+            "clock": self._clock,
+            "entries": [self._ser(e) for e in self.entries],
+            "warm_rows": self.warm.all_rows(),
+            "cold_path": self.cold.path,
+            "cost_tokens": self.summarizer.cost_tokens,
+            "truncation_events": self.truncation_events,
+        }
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(state, f)
+        os.replace(tmp, path)       # atomic
+
+    @classmethod
+    def restore(cls, path: str, **kw) -> "ContextLifecycleManager":
+        with open(path) as f:
+            state = json.load(f)
+        clm = cls(**kw)
+        clm._clock = state["clock"]
+        clm.entries = [cls._deser(d) for d in state["entries"]]
+        for row in state["warm_rows"]:
+            clm.warm.db.execute("INSERT OR REPLACE INTO warm VALUES (?,?,?,?,?,?)",
+                                tuple(row))
+        clm.warm.db.commit()
+        clm.cold.path = state["cold_path"]
+        clm.summarizer.cost_tokens = state["cost_tokens"]
+        clm.truncation_events = state["truncation_events"]
+        return clm
+
+    @staticmethod
+    def _ser(e: Entry) -> dict:
+        if isinstance(e, Summary):
+            return {"type": "summary", "text": e.text, "turn": e.turn,
+                    "topic": e.topic, "source_mids": sorted(e.source_mids)}
+        return {"type": "message", "text": e.text, "turn": e.turn,
+                "topic": e.topic, "role": e.role, "kind": e.kind,
+                "is_key": e.is_key, "key_fact": e.key_fact, "mid": e.mid}
+
+    @staticmethod
+    def _deser(d: dict) -> Entry:
+        if d["type"] == "summary":
+            return Summary(text=d["text"], source_mids=set(d["source_mids"]),
+                           turn=d["turn"], topic=d["topic"])
+        m = Message(role=d["role"], text=d["text"], turn=d["turn"],
+                    topic=d["topic"], kind=d["kind"], is_key=d["is_key"],
+                    key_fact=d["key_fact"])
+        m.mid = d["mid"]
+        return m

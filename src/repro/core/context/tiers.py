@@ -1,0 +1,110 @@
+"""Three-tier context storage (paper §IV.C.1).
+
+  Tier 0 — active window: in-process list (0 ms).
+  Tier 1 — warm storage: SQLite with structured queries (~1 s access,
+           simulated latency bookkeeping only).
+  Tier 2 — cold storage: JSONL full transcript, append-only (~3 s).
+
+Write-back: T0 evictions persist lazily; every message is journaled to T2 on
+arrival (write-ahead style) so hibernation/restore never loses data.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sqlite3
+import tempfile
+from typing import Iterable, List, Optional
+
+from repro.core.context.message import Message, Summary
+
+T1_ACCESS_LATENCY_S = 1.0
+T2_ACCESS_LATENCY_S = 3.0
+
+
+class WarmStore:
+    """Tier 1: compressed summaries + important evictees, queryable."""
+
+    def __init__(self, path: Optional[str] = None):
+        import threading
+        self.path = path or ":memory:"
+        # the middleware touches the CLM from lane worker threads; sqlite
+        # needs cross-thread access + our own mutex
+        self.db = sqlite3.connect(self.path, check_same_thread=False)
+        self._lock = threading.RLock()
+        with self._lock:
+            self.db.execute(
+                "CREATE TABLE IF NOT EXISTS warm ("
+                " id INTEGER PRIMARY KEY, kind TEXT, turn INTEGER,"
+                " topic TEXT, text TEXT, source_mids TEXT)")
+            self.db.commit()
+        self.accesses = 0
+
+    def put_summary(self, s: Summary):
+        with self._lock:
+            self.db.execute(
+                "INSERT OR REPLACE INTO warm VALUES (?,?,?,?,?,?)",
+                (s.sid, "summary", s.turn, s.topic, s.text,
+                 json.dumps(sorted(s.source_mids))))
+            self.db.commit()
+
+    def put_message(self, m: Message):
+        with self._lock:
+            self.db.execute(
+                "INSERT OR REPLACE INTO warm VALUES (?,?,?,?,?,?)",
+                (m.mid, m.kind, m.turn, m.topic, m.text, json.dumps([m.mid])))
+            self.db.commit()
+
+    def search(self, needle: str, limit: int = 8) -> List[tuple]:
+        self.accesses += 1
+        with self._lock:
+            cur = self.db.execute(
+                "SELECT id, kind, turn, topic, text FROM warm "
+                "WHERE text LIKE ? ORDER BY turn DESC LIMIT ?",
+                (f"%{needle}%", limit))
+            return cur.fetchall()
+
+    def all_rows(self) -> List[tuple]:
+        with self._lock:
+            return self.db.execute(
+                "SELECT id, kind, turn, topic, text, source_mids FROM warm"
+            ).fetchall()
+
+    def close(self):
+        self.db.close()
+
+
+class ColdStore:
+    """Tier 2: append-only JSONL transcript."""
+
+    def __init__(self, path: Optional[str] = None):
+        if path is None:
+            fd, path = tempfile.mkstemp(suffix=".jsonl", prefix="agentrm_t2_")
+            os.close(fd)
+        self.path = path
+        self.accesses = 0
+
+    def append(self, m: Message):
+        with open(self.path, "a") as f:
+            f.write(json.dumps({
+                "mid": m.mid, "role": m.role, "turn": m.turn,
+                "topic": m.topic, "kind": m.kind, "is_key": m.is_key,
+                "key_fact": m.key_fact, "text": m.text}) + "\n")
+
+    def scan(self, needle: str) -> List[dict]:
+        self.accesses += 1
+        out = []
+        if not os.path.exists(self.path):
+            return out
+        with open(self.path) as f:
+            for line in f:
+                rec = json.loads(line)
+                if needle in rec["text"]:
+                    out.append(rec)
+        return out
+
+    def load_all(self) -> List[dict]:
+        if not os.path.exists(self.path):
+            return []
+        with open(self.path) as f:
+            return [json.loads(l) for l in f]

@@ -1,0 +1,224 @@
+"""AgentRM middleware: the deployable artifact (paper §IV/§V).
+
+Sits between the agent gateway and the model backend as a transparent layer:
+
+    handle = agentrm.submit(agent_id, "user text")
+    handle.result()        # response text
+
+Internals: MLFQ dispatcher thread + semaphore lane pool + zombie-reaper
+thread (heartbeat watchdog, probabilistic recovery, kill-after-retries) +
+token-bucket/AIMD admission + per-agent Context Lifecycle Manager + resource
+monitor. The backend contract lets real JAX engines (repro.serving) or test
+fakes plug in; heartbeats are the backend's liveness signal.
+"""
+from __future__ import annotations
+
+import queue
+import random
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+from repro.core.context.manager import ContextLifecycleManager
+from repro.core.context.message import Message
+from repro.core.monitor import ResourceMonitor
+from repro.core.scheduler.drf import DRFAccountant
+from repro.core.scheduler.policies import MLFQPolicy
+from repro.core.scheduler.ratelimit import AdmissionController
+from repro.core.scheduler.task import QueueClass, Turn, TurnState
+
+
+class ModelBackend:
+    """Protocol. `generate` must call heartbeat() regularly and honour
+    cancelled (a threading.Event) promptly."""
+
+    def generate(self, agent_id: str, context: str, prompt: str,
+                 heartbeat: Callable[[], None],
+                 cancelled: threading.Event) -> str:
+        raise NotImplementedError
+
+
+@dataclass
+class AgentRMConfig:
+    lanes: int = 4
+    detect_after_s: float = 10.0
+    reaper_period_s: float = 1.0
+    max_retries: int = 2
+    recover_p: float = 0.5
+    token_rate: float = 8000.0
+    token_burst: float = 32000.0
+    context_limit_tokens: int = 50_000
+    physical_tokens: int = 100_000
+    psi_inject: bool = True
+    seed: int = 0
+
+
+class TurnHandle:
+    def __init__(self, turn: Turn):
+        self.turn = turn
+        self._done = threading.Event()
+        self._result: Optional[str] = None
+        self._error: Optional[BaseException] = None
+
+    def _finish(self, result=None, error=None):
+        self._result, self._error = result, error
+        self._done.set()
+
+    def result(self, timeout: Optional[float] = None) -> str:
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"turn {self.turn.tid} still pending")
+        if self._error:
+            raise self._error
+        return self._result
+
+
+class ZombieKilled(RuntimeError):
+    pass
+
+
+class AgentRM:
+    """The middleware resource manager."""
+
+    def __init__(self, backend: ModelBackend,
+                 cfg: Optional[AgentRMConfig] = None):
+        self.backend = backend
+        self.cfg = cfg or AgentRMConfig()
+        self.rng = random.Random(self.cfg.seed)
+        self.monitor = ResourceMonitor(lanes_total=self.cfg.lanes)
+        self.drf = DRFAccountant(self.cfg.lanes, self.cfg.token_rate)
+        self.policy = MLFQPolicy(drf=self.drf)
+        self.admission = AdmissionController(self.cfg.token_rate,
+                                             self.cfg.token_burst)
+        self.clm: Dict[str, ContextLifecycleManager] = {}
+        self.handles: Dict[int, TurnHandle] = {}
+        self._prompts: Dict[int, str] = {}
+        self._running: Dict[int, dict] = {}
+        self._lock = threading.RLock()
+        self._wake = threading.Event()
+        self._stop = threading.Event()
+        self._lanes = threading.Semaphore(self.cfg.lanes)
+        self._dispatcher = threading.Thread(target=self._dispatch_loop,
+                                            daemon=True)
+        self._reaper = threading.Thread(target=self._reaper_loop, daemon=True)
+        self._dispatcher.start()
+        self._reaper.start()
+
+    # ------------------------------------------------------------ public
+    def submit(self, agent_id: str, prompt: str,
+               queue_class: QueueClass = QueueClass.INTERACTIVE,
+               est_tokens: int = 800) -> TurnHandle:
+        turn = Turn(agent_id=agent_id, arrival=time.monotonic(),
+                    service=0.0, queue_class=queue_class, tokens=est_tokens)
+        handle = TurnHandle(turn)
+        with self._lock:
+            self.handles[turn.tid] = handle
+            self._prompts[turn.tid] = prompt
+            turn._enq_at = time.monotonic()
+            self.policy.enqueue(turn, time.monotonic())
+            self.monitor.on_queue_depth(int(queue_class),
+                                        len(self.policy))
+        self._wake.set()
+        return handle
+
+    def context_for(self, agent_id: str) -> ContextLifecycleManager:
+        with self._lock:
+            if agent_id not in self.clm:
+                self.clm[agent_id] = ContextLifecycleManager(
+                    limit_tokens=self.cfg.context_limit_tokens,
+                    physical_tokens=self.cfg.physical_tokens)
+            return self.clm[agent_id]
+
+    def shutdown(self):
+        self._stop.set()
+        self._wake.set()
+
+    # --------------------------------------------------------- internals
+    def _dispatch_loop(self):
+        while not self._stop.is_set():
+            self._wake.wait(timeout=0.05)
+            self._wake.clear()
+            while True:
+                with self._lock:
+                    self.policy.on_tick(time.monotonic())
+                    nxt = self.policy.dequeue(time.monotonic())
+                    if nxt is None:
+                        break
+                    if not self.admission.admit(nxt.tokens, time.monotonic()):
+                        nxt._enq_at = time.monotonic()
+                        self.policy.requeue(nxt, time.monotonic())
+                        break
+                if not self._lanes.acquire(timeout=0.2):
+                    with self._lock:
+                        self.policy.requeue(nxt, time.monotonic())
+                    break
+                threading.Thread(target=self._run_turn, args=(nxt,),
+                                 daemon=True).start()
+
+    def _run_turn(self, turn: Turn):
+        handle = self.handles[turn.tid]
+        cancelled = threading.Event()
+        rec = {"turn": turn, "last_beat": time.monotonic(),
+               "cancelled": cancelled, "lane_at": time.monotonic()}
+        with self._lock:
+            self._running[turn.tid] = rec
+            self.monitor.on_lane(+1)
+            self.drf.acquire(turn.agent_id, 1.0, turn.tokens)
+        turn.state = TurnState.RUNNING
+        turn.start = turn.start or time.monotonic()
+
+        clm = self.context_for(turn.agent_id)
+        prompt = self._prompts[turn.tid]
+        parts = [e.text for e in clm.window()]
+        if self.cfg.psi_inject:
+            parts.append(clm.psi_message())
+        context = "\n".join(parts)
+
+        def heartbeat():
+            rec["last_beat"] = time.monotonic()
+
+        try:
+            out = self.backend.generate(turn.agent_id, context, prompt,
+                                        heartbeat, cancelled)
+            if cancelled.is_set():
+                raise ZombieKilled(f"turn {turn.tid} reaped")
+            t = turn._enq_at  # arrival bookkeeping for CLM turn ids
+            clm.add(Message(role="user", text=prompt, turn=clm._clock + 1))
+            clm.add(Message(role="assistant", text=out, turn=clm._clock + 1))
+            self.monitor.on_context(turn.agent_id, clm.window_tokens,
+                                    clm.limit)
+            turn.state = TurnState.DONE
+            turn.end = time.monotonic()
+            handle._finish(result=out)
+        except BaseException as e:  # noqa: BLE001 — reap/kill path
+            turn.state = TurnState.FAILED
+            handle._finish(error=e)
+        finally:
+            with self._lock:
+                self._running.pop(turn.tid, None)
+                self.monitor.on_lane(-1)
+                self.drf.release(turn.agent_id, 1.0, turn.tokens)
+            self._lanes.release()
+            self._wake.set()
+
+    def _reaper_loop(self):
+        while not self._stop.is_set():
+            time.sleep(self.cfg.reaper_period_s)
+            now = time.monotonic()
+            with self._lock:
+                hanging = [r for r in self._running.values()
+                           if now - r["last_beat"] > self.cfg.detect_after_s]
+            for rec in hanging:
+                turn: Turn = rec["turn"]
+                turn.retries += 1
+                if (turn.retries <= self.cfg.max_retries
+                        and self.rng.random() < self.cfg.recover_p):
+                    # probabilistic recovery: nudge the backend via heartbeat
+                    # reset; transient stalls resume on their own
+                    rec["last_beat"] = now
+                    turn.recovered = True
+                    self.monitor.on_reap(recovered=True)
+                elif turn.retries > self.cfg.max_retries:
+                    turn.was_zombie = True
+                    rec["cancelled"].set()
+                    self.monitor.on_reap(recovered=False)

@@ -1,0 +1,89 @@
+"""Resource Monitor (paper §IV.A component 3): global utilisation state that
+feeds scheduling decisions and the PSI injection. Pure bookkeeping — cheap
+enough to sit on the middleware hot path.
+"""
+from __future__ import annotations
+
+import time
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, Optional
+
+
+@dataclass
+class MonitorSnapshot:
+    lanes_busy: int
+    lanes_total: int
+    queue_depths: Dict[int, int]
+    api_utilization: float          # consumed fraction of the token bucket
+    zombies_reaped: int
+    recoveries: int
+    context_pressure: Dict[str, float]  # agent -> window/limit
+    step_time_ewma_s: float
+    stragglers: int
+
+
+class ResourceMonitor:
+    """Tracks lanes, queues, API budget, per-agent context pressure, and a
+    straggler detector (per-step EWMA + threshold, used by the training
+    launcher as well)."""
+
+    def __init__(self, lanes_total: int = 4, straggler_factor: float = 3.0):
+        self.lanes_total = lanes_total
+        self.lanes_busy = 0
+        self.queue_depths: Dict[int, int] = defaultdict(int)
+        self.api_used = 0.0
+        self.api_budget = 1.0
+        self.zombies_reaped = 0
+        self.recoveries = 0
+        self.context_pressure: Dict[str, float] = {}
+        self._step_times: Deque[float] = deque(maxlen=64)
+        self._ewma: Optional[float] = None
+        self.straggler_factor = straggler_factor
+        self.stragglers = 0
+
+    # --- scheduler feed ---
+    def on_lane(self, busy_delta: int):
+        self.lanes_busy = max(0, self.lanes_busy + busy_delta)
+
+    def on_queue_depth(self, level: int, depth: int):
+        self.queue_depths[level] = depth
+
+    def on_api(self, used: float, budget: float):
+        self.api_used, self.api_budget = used, max(budget, 1e-9)
+
+    def on_reap(self, recovered: bool):
+        if recovered:
+            self.recoveries += 1
+        else:
+            self.zombies_reaped += 1
+
+    # --- CLM feed ---
+    def on_context(self, agent_id: str, window_tokens: int, limit: int):
+        self.context_pressure[agent_id] = window_tokens / max(limit, 1)
+
+    # --- straggler detection (also used by launch/train.py) ---
+    def observe_step(self, seconds: float) -> bool:
+        """Returns True if this step is a straggler (> factor * EWMA)."""
+        is_straggler = (self._ewma is not None
+                        and seconds > self.straggler_factor * self._ewma)
+        if is_straggler:
+            self.stragglers += 1
+        alpha = 0.1
+        self._ewma = seconds if self._ewma is None else \
+            (1 - alpha) * self._ewma + alpha * seconds
+        self._step_times.append(seconds)
+        return is_straggler
+
+    def snapshot(self) -> MonitorSnapshot:
+        return MonitorSnapshot(
+            lanes_busy=self.lanes_busy,
+            lanes_total=self.lanes_total,
+            queue_depths=dict(self.queue_depths),
+            api_utilization=self.api_used / self.api_budget,
+            zombies_reaped=self.zombies_reaped,
+            recoveries=self.recoveries,
+            context_pressure=dict(self.context_pressure),
+            step_time_ewma_s=self._ewma or 0.0,
+            stragglers=self.stragglers,
+        )

@@ -1,0 +1,20 @@
+from repro.core.scheduler.drf import DRFAccountant
+from repro.core.scheduler.policies import (FIFOPolicy, MLFQPolicy, Policy,
+                                           PriorityQueuePolicy,
+                                           RoundRobinPolicy, make_policy)
+from repro.core.scheduler.ratelimit import (AdmissionController,
+                                            AIMDController, TokenBucket)
+from repro.core.scheduler.scenarios import SCENARIOS, Scenario, make_turns
+from repro.core.scheduler.simulator import (Metrics, SimConfig, Simulator,
+                                            run_policy)
+from repro.core.scheduler.task import (QueueClass, Turn, TurnState,
+                                       ZOMBIE_THRESHOLD_S)
+
+__all__ = [
+    "DRFAccountant", "FIFOPolicy", "MLFQPolicy", "Policy",
+    "PriorityQueuePolicy", "RoundRobinPolicy", "make_policy",
+    "AdmissionController", "AIMDController", "TokenBucket",
+    "SCENARIOS", "Scenario", "make_turns",
+    "Metrics", "SimConfig", "Simulator", "run_policy",
+    "QueueClass", "Turn", "TurnState", "ZOMBIE_THRESHOLD_S",
+]

@@ -1,0 +1,34 @@
+"""Dominant Resource Fairness (Ghodsi et al., NSDI'11) across agents.
+
+Resources are multi-dimensional: lanes and API tokens/s. Each agent's
+dominant share is its max usage fraction across dimensions; the scheduler
+prefers the queued turn whose agent currently has the smallest dominant
+share. Work-conservation is a property of the caller (MLFQ lends idle lanes
+downward), not of this accountant.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict
+
+
+class DRFAccountant:
+    def __init__(self, total_lanes: int, total_token_rate: float):
+        self.totals = {"lanes": float(max(total_lanes, 1)),
+                       "tokens": float(max(total_token_rate, 1.0))}
+        self.usage: Dict[str, Dict[str, float]] = defaultdict(
+            lambda: {"lanes": 0.0, "tokens": 0.0})
+
+    def acquire(self, agent: str, lanes: float = 1.0, tokens: float = 0.0):
+        u = self.usage[agent]
+        u["lanes"] += lanes
+        u["tokens"] += tokens
+
+    def release(self, agent: str, lanes: float = 1.0, tokens: float = 0.0):
+        u = self.usage[agent]
+        u["lanes"] = max(0.0, u["lanes"] - lanes)
+        u["tokens"] = max(0.0, u["tokens"] - tokens)
+
+    def dominant_share(self, agent: str) -> float:
+        u = self.usage[agent]
+        return max(u[r] / self.totals[r] for r in self.totals)

@@ -1,0 +1,195 @@
+"""Scheduling policies: FIFO, Round-Robin, Priority-Queue, AgentRM-MLFQ.
+
+The simulator owns lanes and the clock; a policy only orders the queue(s).
+Interface:
+  enqueue(turn, now)   — new arrival
+  requeue(turn, now)   — preempted / boosted re-entry
+  dequeue(now)         — next turn to dispatch or None
+  on_tick(now)         — periodic housekeeping (boost)
+  preemptive/quantum   — RR preemption contract
+"""
+from __future__ import annotations
+
+import heapq
+from collections import deque
+from typing import Optional
+
+from repro.core.scheduler.drf import DRFAccountant
+from repro.core.scheduler.task import QueueClass, Turn
+
+
+class Policy:
+    name = "base"
+    preemptive = False
+    quantum = 0.0
+
+    def enqueue(self, turn: Turn, now: float): ...
+    def requeue(self, turn: Turn, now: float):
+        self.enqueue(turn, now)
+    def dequeue(self, now: float) -> Optional[Turn]: ...
+    def on_tick(self, now: float): ...
+    def __len__(self) -> int: ...
+
+
+class FIFOPolicy(Policy):
+    name = "FIFO"
+
+    def __init__(self):
+        self.q: deque = deque()
+
+    def enqueue(self, turn, now):
+        self.q.append(turn)
+
+    def dequeue(self, now):
+        return self.q.popleft() if self.q else None
+
+    def __len__(self):
+        return len(self.q)
+
+
+class RoundRobinPolicy(Policy):
+    """Quantum-preemptive round robin: a running turn is paused after
+    `quantum` seconds of service and re-queued at the tail (progress kept)."""
+    name = "Round Robin"
+    preemptive = True
+    quantum = 1.0
+
+    def __init__(self):
+        self.q: deque = deque()
+
+    def enqueue(self, turn, now):
+        self.q.append(turn)
+
+    def requeue(self, turn, now):
+        self.q.append(turn)
+
+    def dequeue(self, now):
+        return self.q.popleft() if self.q else None
+
+    def __len__(self):
+        return len(self.q)
+
+
+class PriorityQueuePolicy(Policy):
+    """Strict static priority by queue class, FIFO within class."""
+    name = "Priority Queue"
+
+    def __init__(self):
+        self.h: list = []
+        self._seq = 0
+
+    def enqueue(self, turn, now):
+        heapq.heappush(self.h, (int(turn.queue_class), self._seq, turn))
+        self._seq += 1
+
+    def dequeue(self, now):
+        return heapq.heappop(self.h)[2] if self.h else None
+
+    def __len__(self):
+        return len(self.h)
+
+
+class MLFQPolicy(Policy):
+    """AgentRM-MLFQ (paper Algorithm 1).
+
+    * Three queues: Q0 interactive / Q1 sub-agent / Q2 background; a turn
+      starts in the queue of its class.
+    * Demotion: accumulated service beyond the per-level allotment drops the
+      turn one level on requeue.
+    * Boost: every `boost_period` seconds, turns waiting longer than
+      `starve_after` are promoted to Q0 (CTSS/Solaris-TS style anti-
+      starvation; `boosted` marks them so the starvation metric reflects
+      that the scheduler intervened).
+    * DRF: within a queue, the turn whose agent has the lowest dominant
+      share is picked first.
+    * Work-conserving: lower queues are served whenever higher ones are
+      empty (the dequeue scan order).
+    """
+    name = "AgentRM-MLFQ"
+    allotments = (10.0, 30.0, float("inf"))
+    boost_period = 25.0
+    starve_after = 45.0
+
+    def __init__(self, drf: Optional[DRFAccountant] = None):
+        self.queues = [deque(), deque(), deque()]
+        self.drf = drf
+        self._last_boost = 0.0
+        self._wait_since: dict = {}
+
+    def _level(self, turn: Turn) -> int:
+        base = int(turn.queue_class)
+        return min(2, base + turn.demotions)
+
+    def enqueue(self, turn, now):
+        # cumulative-wait clock: re-queued turns keep their accrued waiting
+        # time so the boost sees total starvation, not per-episode waits
+        self._wait_since[turn.tid] = now - turn.queue_wait
+        self.queues[self._level(turn)].append(turn)
+
+    def requeue(self, turn, now):
+        # demote if it overran its level's service allotment
+        if turn.executed > self.allotments[self._level(turn)]:
+            turn.demotions += 1
+        self.enqueue(turn, now)
+
+    def dequeue(self, now):
+        for q in self.queues:
+            if not q:
+                continue
+            if self.drf is None or len(q) == 1:
+                t = q.popleft()
+            else:
+                # DRF pick among the first few waiters (bounded scan)
+                window = min(len(q), 8)
+                best = min(range(window),
+                           key=lambda i: self.drf.dominant_share(q[i].agent_id))
+                t = q[best]
+                del q[best]
+            if now - self._wait_since.get(t.tid, now) > self.starve_after:
+                t.boosted = True   # served exactly because it aged to the front
+            self._wait_since.pop(t.tid, None)
+            return t
+        return None
+
+    def on_tick(self, now):
+        if now - self._last_boost < self.boost_period:
+            return
+        self._last_boost = now
+        promoted = []
+        for lvl in (1, 2):
+            keep = deque()
+            for t in self.queues[lvl]:
+                if now - self._wait_since.get(t.tid, now) > self.starve_after:
+                    t.boosted = True
+                    t.demotions = 0
+                    promoted.append(t)
+                else:
+                    keep.append(t)
+            self.queues[lvl] = keep
+        for t in promoted:
+            self.queues[0].append(t)
+        # Q0 waiters past the starvation horizon move to the front (vruntime-
+        # style acknowledgement; this is what keeps Starved == 0 under load)
+        aged = [t for t in self.queues[0]
+                if now - self._wait_since.get(t.tid, now) > self.starve_after]
+        if aged:
+            rest = [t for t in self.queues[0] if t not in aged]
+            for t in aged:
+                t.boosted = True
+            self.queues[0] = deque(aged + rest)
+
+    def __len__(self):
+        return sum(len(q) for q in self.queues)
+
+
+def make_policy(name: str, drf: Optional[DRFAccountant] = None) -> Policy:
+    n = name.lower()
+    if n in ("fifo",):
+        return FIFOPolicy()
+    if n in ("rr", "round robin", "round_robin"):
+        return RoundRobinPolicy()
+    if n in ("pq", "priority", "priority queue", "priority_queue"):
+        return PriorityQueuePolicy()
+    if n in ("mlfq", "agentrm", "agentrm-mlfq"):
+        return MLFQPolicy(drf=drf)
+    raise KeyError(name)

@@ -1,0 +1,74 @@
+"""Rate-limit-aware admission control (paper §IV.B.3).
+
+TokenBucket per model API + AIMD backoff (TCP-style: multiplicative decrease
+on a rate-limit signal, additive recovery) + queue-entry admission checks.
+All time is the caller's virtual clock.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class TokenBucket:
+    rate: float                 # tokens/second refill
+    burst: float                # bucket capacity
+    level: float = field(default=None)  # type: ignore[assignment]
+    last: float = 0.0
+
+    def __post_init__(self):
+        if self.level is None:
+            self.level = self.burst
+
+    def _refill(self, now: float):
+        self.level = min(self.burst, self.level + (now - self.last) * self.rate)
+        self.last = now
+
+    def try_consume(self, tokens: float, now: float) -> bool:
+        self._refill(now)
+        if self.level >= tokens:
+            self.level -= tokens
+            return True
+        return False
+
+    def available(self, now: float) -> float:
+        self._refill(now)
+        return self.level
+
+    def time_until(self, tokens: float, now: float) -> float:
+        """Seconds until `tokens` would be available (0 if already)."""
+        self._refill(now)
+        deficit = tokens - self.level
+        return max(0.0, deficit / self.rate) if self.rate > 0 else float("inf")
+
+
+@dataclass
+class AIMDController:
+    """Adjusts the admission rate multiplier on rate-limit feedback."""
+    increase: float = 0.05      # additive step per clean scan
+    decrease: float = 0.5       # multiplicative cut on a rate-limit event
+    floor: float = 0.1
+    multiplier: float = 1.0
+
+    def on_rate_limited(self):
+        self.multiplier = max(self.floor, self.multiplier * self.decrease)
+
+    def on_clean(self):
+        self.multiplier = min(1.0, self.multiplier + self.increase)
+
+
+class AdmissionController:
+    """Queue-entry admission: a turn is dispatched only when the (AIMD-scaled)
+    token bucket can afford its projected token usage."""
+
+    def __init__(self, rate: float = 4000.0, burst: float = 16000.0):
+        self.bucket = TokenBucket(rate=rate, burst=burst)
+        self.aimd = AIMDController()
+
+    def admit(self, tokens: float, now: float) -> bool:
+        budget = tokens / max(self.aimd.multiplier, 1e-6)
+        return self.bucket.try_consume(budget, now)
+
+    def next_slot(self, tokens: float, now: float) -> float:
+        budget = tokens / max(self.aimd.multiplier, 1e-6)
+        return self.bucket.time_until(budget, now)

@@ -1,0 +1,67 @@
+"""Turn / agent / lane abstractions (paper §III System Model).
+
+A *turn* t = (m_in, m_out, d, r): one agent request = one LLM call (prefill +
+decode) from the engine's perspective. A *lane* is an execution slot — in the
+real serving stack a continuous-batching slot, in the simulator a token of
+capacity. A turn becomes a *zombie* when it holds a lane for more than
+ZOMBIE_THRESHOLD_S while hanging (paper §III.A, adopted verbatim on the
+virtual clock).
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+from dataclasses import dataclass, field
+from typing import Optional
+
+ZOMBIE_THRESHOLD_S = 30.0
+
+_ids = itertools.count()
+
+
+class QueueClass(enum.IntEnum):
+    INTERACTIVE = 0      # Q0: user-facing messages
+    SUBAGENT = 1         # Q1: computational tasks spawned by agents
+    BACKGROUND = 2       # Q2: maintenance / logging / periodic
+
+
+class TurnState(enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    HANGING = "hanging"
+    DONE = "done"
+    FAILED = "failed"
+
+
+@dataclass
+class Turn:
+    agent_id: str
+    arrival: float
+    service: float                      # seconds of productive work
+    queue_class: QueueClass = QueueClass.INTERACTIVE
+    hangs: bool = False                 # this attempt stalls instead of running
+    hang_duration: float = 80.0         # how long an unreaped hang occupies a lane
+    tokens: int = 800                   # API tokens consumed (rate limiting)
+    weight: float = 1.0                 # w_t priority weight
+    tid: int = field(default_factory=lambda: next(_ids))
+
+    # --- runtime bookkeeping (filled by the simulator) ---
+    state: TurnState = TurnState.QUEUED
+    start: Optional[float] = None       # first lane acquisition
+    end: Optional[float] = None
+    first_wait: Optional[float] = None  # arrival -> first start
+    queue_wait: float = 0.0             # total time spent queued
+    executed: float = 0.0               # productive seconds so far (RR resume)
+    hold: float = 0.0                   # lane-hold seconds of the hanging span
+    was_zombie: bool = False
+    recovered: bool = False
+    boosted: bool = False
+    retries: int = 0
+    demotions: int = 0
+
+    @property
+    def response_time(self) -> Optional[float]:
+        return None if self.end is None else self.end - self.arrival
+
+    def remaining(self) -> float:
+        return max(0.0, self.service - self.executed)

@@ -1,0 +1,4 @@
+"""Distribution utilities."""
+from repro.distributed.constrain import maybe_constrain
+
+__all__ = ["maybe_constrain"]

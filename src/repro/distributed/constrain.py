@@ -1,0 +1,41 @@
+"""Best-effort sharding constraints inside model code.
+
+GSPMD's propagation through scan bodies sometimes settles on replication for
+attention activations even when a clean head sharding exists (measured in
+EXPERIMENTS.md §Perf A1). ``maybe_constrain`` applies an explicit
+with_sharding_constraint when a physical mesh with the named axis is active
+and the dim divides it — and is a no-op everywhere else (smoke tests,
+single-device examples), so model code can call it unconditionally.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _active_mesh():
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+def maybe_constrain(x, spec_dims):
+    """spec_dims: tuple of axis-name-or-None per dim of x."""
+    m = _active_mesh()
+    if m is None:
+        return x
+    dims = []
+    for size, ax in zip(x.shape, spec_dims):
+        if ax is not None and ax in m.axis_names and size % m.shape[ax] == 0:
+            dims.append(ax)
+        else:
+            dims.append(None)
+    if not any(dims):
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*dims))
+    except Exception:
+        return x

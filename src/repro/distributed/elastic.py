@@ -1,0 +1,30 @@
+"""Elastic re-mesh: restore a checkpoint onto a different mesh shape.
+
+Checkpoints store logically-unsharded arrays (repro.checkpoint), so elastic
+scaling is a placement problem: recompute the sharding rules against the new
+mesh and device_put each leaf. Rules degrade gracefully (dims that stop
+dividing the new axis sizes fall back to replication), which is what makes
+shrink-to-fewer-hosts restarts safe.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import param_shardings
+
+
+def reshard_params(cfg: ModelConfig, params: Any, mesh) -> Any:
+    """Place a (host-resident) param pytree onto `mesh` under the rules."""
+    shardings = param_shardings(cfg, mesh, params)
+    return jax.tree_util.tree_map(jax.device_put, params, shardings)
+
+
+def elastic_restore(cfg: ModelConfig, checkpointer, like: Any, mesh,
+                    step=None):
+    """Restore the latest checkpoint and re-place it on a (possibly
+    different) mesh. Returns (placed_tree, step, extra)."""
+    tree, step, extra = checkpointer.restore(like, step=step)
+    return reshard_params(cfg, tree, mesh), step, extra

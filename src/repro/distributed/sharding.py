@@ -1,0 +1,197 @@
+"""Sharding rules: 2-D (TP x FSDP) parameter layout, EP for MoE experts,
+sequence-sharded KV caches for decode, batch over (pod, data).
+
+Rules are name-based over pytree paths; every rule specifies the trailing
+dims, and leading stack dims (scanned layers / hybrid groups) get None
+prepended automatically. Dims that don't divide the mesh axis stay
+unsharded (never silently uneven).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+DP, MP, POD = "data", "model", "pod"
+
+# rule table: path-regex -> trailing-dims spec template using DP/MP markers.
+# the first matching rule wins.
+_PARAM_RULES = [
+    (r"embed$", (MP, DP)),
+    (r"lm_head$", (DP, MP)),
+    (r"(dec_pos|enc_pos)$", (None, DP)),
+    (r"(kv_norm|norm|attn_norm|mlp_norm|cross_norm|final_norm|enc_final_norm)$",
+     (None,)),
+    # attention
+    (r"attn/w(q|k|v)$", (DP, MP)),
+    (r"cross/w(q|k|v)$", (DP, MP)),
+    (r"(attn|cross)/wo$", (MP, DP)),
+    # MLA
+    (r"attn/w_dkv$", (DP, None)),
+    (r"attn/w_u(k|v)$", (None, MP)),
+    # dense MLP
+    (r"mlp/w_(gate|up)$", (DP, MP)),
+    (r"mlp/w_down$", (MP, DP)),
+    # MoE: experts over MP (expert parallelism), router replicated-on-MP
+    (r"moe/router$", (DP, None)),
+    (r"moe/w_(gate|up)$", (MP, DP, None)),
+    (r"moe/w_down$", (MP, None, DP)),
+    (r"moe/shared/w_(gate|up)$", (DP, MP)),
+    (r"moe/shared/w_down$", (MP, DP)),
+    # Mamba
+    (r"mamba/in_proj$", (DP, MP)),
+    (r"mamba/conv_w$", (None, MP)),
+    (r"mamba/conv_b$", (MP,)),
+    (r"mamba/(A_log|D|dt_bias)$", (MP,)),
+    (r"mamba/out_proj$", (MP, DP)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+    return "/".join(parts)
+
+
+def _axis_ok(mesh: Mesh, axis: Optional[str], dim: int) -> Optional[str]:
+    if axis is None:
+        return None
+    return axis if dim % mesh.shape[axis] == 0 else None
+
+
+def param_pspec(cfg: ModelConfig, mesh: Mesh, path, leaf) -> P:
+    name = _path_str(path)
+    # kv projections: a 16-way shard of hkv*hd is only expressible as a
+    # head-major tiling when hkv divides the mesh axis; otherwise GSPMD
+    # must all-gather at the (hkv, hd) reshape and the whole attention
+    # computation replicates (EXPERIMENTS.md §Perf A1). Replicating the
+    # small kv projection across `model` avoids that.
+    if re.search(r"attn/w(k|v)$", name) and cfg.n_kv_heads and             cfg.n_kv_heads % mesh.shape[MP] != 0:
+        t = 2
+        lead = (None,) * (leaf.ndim - t)
+        return P(*(lead + (_axis_ok(mesh, DP, leaf.shape[-2]), None)))
+    for pat, template in _PARAM_RULES:
+        if re.search(pat, name):
+            t = len(template)
+            lead = (None,) * (leaf.ndim - t)
+            dims = tuple(
+                _axis_ok(mesh, ax, leaf.shape[leaf.ndim - t + i])
+                for i, ax in enumerate(template))
+            return P(*(lead + dims))
+    return P()                       # replicate by default (norm scales etc.)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params_tree) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_pspec(cfg, mesh, path,
+                                                           leaf)),
+        params_tree)
+
+
+def batch_axes(mesh: Mesh, batch: int):
+    """Largest (pod?, data) product that divides the global batch."""
+    axes = []
+    if POD in mesh.shape:
+        if batch % (mesh.shape[POD] * mesh.shape[DP]) == 0:
+            return (POD, DP)
+        if batch % mesh.shape[POD] == 0:
+            return (POD,)
+    if batch % mesh.shape[DP] == 0:
+        return (DP,)
+    return None
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, specs: Dict[str, Any]) -> Any:
+    out = {}
+    for k, sds in specs.items():
+        if sds.ndim == 0:
+            out[k] = NamedSharding(mesh, P())
+            continue
+        ba = batch_axes(mesh, sds.shape[0])
+        out[k] = NamedSharding(mesh, P(ba, *([None] * (sds.ndim - 1))))
+    return out
+
+
+def decode_state_pspec(cfg: ModelConfig, mesh: Mesh, path, leaf) -> P:
+    """KV caches: batch over data, sequence over model (sequence-parallel
+    cache — the KV tensor is the dominant decode working set). SSM states:
+    heads/channels over model."""
+    name = _path_str(path)
+    ba = None
+    # locate the batch dim: stacked layer caches are (L, B, ...) or hybrid
+    # (G, E, B, ...); whisper cross caches (L, B, S, h, hd)
+    def spec_for(dims_after_stack, batch_pos):
+        lead = [None] * batch_pos
+        b = leaf.shape[batch_pos]
+        lead.append(batch_axes(mesh, b) and DP if b % mesh.shape[DP] == 0
+                    else None)
+        rest = [None] * (leaf.ndim - batch_pos - 1)
+        return lead, rest
+
+    if re.search(r"(^|/)(k|v|ckv|krope|cross_k|cross_v|attn_k|attn_v)\d?$",
+                 name):
+        stack = 1 if not name.startswith(("ckv0", "krope0")) else 0
+        if name in ("ckv0", "krope0"):
+            stack = 0
+        lead, rest = spec_for(None, stack)
+        # sequence dim right after batch
+        seq_idx = stack + 1
+        rest = [None] * (leaf.ndim - stack - 1)
+        if leaf.shape[seq_idx] % mesh.shape[MP] == 0:
+            rest[0] = MP
+        return P(*(lead + rest))
+    if re.search(r"(conv|tail_conv)$", name):
+        spec = [None] * leaf.ndim
+        if leaf.shape[-1] % mesh.shape[MP] == 0:
+            spec[-1] = MP
+        b_idx = leaf.ndim - 3
+        if leaf.shape[b_idx] % mesh.shape[DP] == 0:
+            spec[b_idx] = DP
+        return P(*spec)
+    if re.search(r"(ssm|tail_ssm)$", name):
+        # (..., B, g, hg, n, p): shard hg over model
+        spec = [None] * leaf.ndim
+        if leaf.shape[-3] % mesh.shape[MP] == 0:
+            spec[-3] = MP
+        b_idx = leaf.ndim - 5
+        if leaf.shape[b_idx] % mesh.shape[DP] == 0:
+            spec[b_idx] = DP
+        return P(*spec)
+    return P()
+
+
+def decode_state_shardings(cfg: ModelConfig, mesh: Mesh, state_tree) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, decode_state_pspec(cfg, mesh, path, leaf)),
+        state_tree)
+
+
+def opt_state_shardings(cfg: ModelConfig, mesh: Mesh, opt_tree, params_tree):
+    """Moments mirror the param layout (ZeRO); step scalar replicated."""
+    pshard = param_shardings(cfg, mesh, params_tree)
+
+    def like(path, leaf):
+        name = _path_str(path)
+        if name.startswith("0") or leaf.ndim == 0:     # step counter
+            return NamedSharding(mesh, P())
+        # m/v/err trees share params' structure under fields 1..3
+        return None
+
+    # structure: AdamWState(step, m, v, err)
+    import jax.tree_util as jtu
+    step_s = NamedSharding(mesh, P())
+    m_s = pshard
+    v_s = pshard
+    err = opt_tree.err
+    err_s = pshard if err is not None else None
+    from repro.training.optimizer import AdamWState
+    return AdamWState(step=step_s, m=m_s, v=v_s, err=err_s)

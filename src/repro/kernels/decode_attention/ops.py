@@ -1,0 +1,26 @@
+"""Public wrapper for decode attention: model layout (b, 1, h, d) + cache
+layout (b, S, hkv, d) -> kernel layout, padding to block multiples."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_bhd
+
+
+def decode_attention(q, cache_k, cache_v, kv_len, *, scale=None,
+                     blk_k: int = 512, interpret: bool = False,
+                     q_offset_for_window=None):
+    """q: (b, 1, hq, d); cache_k/v: (b, S, hkv, d|dv); kv_len: scalar."""
+    b, one, hq, d = q.shape
+    s = cache_k.shape[1]
+    blk = min(blk_k, s)
+    pad = (-s) % blk
+    if pad:
+        cache_k = jnp.pad(cache_k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cache_v = jnp.pad(cache_v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    o = decode_attention_bhd(
+        q[:, 0].transpose(0, 1, 2).reshape(b, hq, d),
+        cache_k.transpose(0, 2, 1, 3),
+        cache_v.transpose(0, 2, 1, 3),
+        kv_len, scale=scale, blk_k=blk, interpret=interpret)
+    return o.reshape(b, 1, hq, -1)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for decode attention (1 query token vs KV cache with a
+dynamic valid length)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, kv_len, *, scale=None):
+    """q: (b, hq, d); k: (b, hkv, S, d); v: (b, hkv, S, dv); kv_len scalar.
+    Returns (b, hq, dv)."""
+    b, hq, d = q.shape
+    hkv, s, dv = k.shape[1], k.shape[2], v.shape[-1]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(b, hkv, g, d)
+    sc = jnp.einsum("bhgd,bhkd->bhgk", qg.astype(jnp.float32),
+                    k.astype(jnp.float32)) * scale
+    mask = jnp.arange(s) < kv_len
+    sc = jnp.where(mask[None, None, None], sc, -jnp.inf)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p.astype(jnp.float32),
+                   v.astype(jnp.float32))
+    return o.reshape(b, hq, dv).astype(q.dtype)

@@ -1,0 +1,24 @@
+"""jit'd public wrapper: (b, s, h, d) layout in/out, padding + GQA handling.
+
+On CPU (no TPU backend) the Pallas kernel runs in interpret mode when
+explicitly requested (tests); the model stack selects this path only when
+cfg.use_pallas is True.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale=None,
+                    blk_q: int = 256, blk_k: int = 256,
+                    interpret: bool = False):
+    """q: (b, sq, hq, d); k: (b, skv, hkv, d); v: (b, skv, hkv, dv)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = flash_attention_bhsd(qt, kt, vt, causal=causal, scale=scale,
+                             blk_q=blk_q, blk_k=blk_k, interpret=interpret)
+    return o.transpose(0, 2, 1, 3)

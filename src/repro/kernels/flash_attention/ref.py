@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the flash-attention kernel (causal + GQA + dv!=dqk)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale=None):
+    """q: (b, sq, hq, d); k: (b, skv, hkv, d); v: (b, skv, hkv, dv).
+    hq % hkv == 0. Returns (b, sq, hq, dv) in q.dtype; f32 softmax."""
+    b, sq, hq, d = q.shape
+    skv, hkv, dv = k.shape[1], k.shape[2], v.shape[-1]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(b, sq, hkv, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(skv)[None, :]
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(jnp.float32),
+                   v.astype(jnp.float32))
+    return o.reshape(b, sq, hq, dv).astype(q.dtype)

@@ -1,0 +1,24 @@
+"""Public wrapper for the SSD kernel: model layout (b, s, h, p) <-> kernel
+layout (b, h, s, p); reshapes the returned state to the model's
+(b, g, h/g, n, p) convention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.ssd.kernel import ssd_bhsd
+
+
+def ssd(x, dt, A, B, C, *, chunk: int = 256, interpret: bool = False):
+    """x: (b, s, h, p); dt: (b, s, h); A: (h,); B, C: (b, s, g, n)."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    y, state = ssd_bhsd(
+        x.transpose(0, 2, 1, 3),
+        dt.transpose(0, 2, 1),
+        A,
+        B.transpose(0, 2, 1, 3),
+        C.transpose(0, 2, 1, 3),
+        chunk=chunk, interpret=interpret)
+    y = y.transpose(0, 2, 1, 3)
+    state = state.reshape(b, g, h // g, n, p)
+    return y, state

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the SSD kernel: the sequential (non-chunked)
+selective-state recurrence — the ground truth both the chunked jnp
+formulation (repro.models.ssd.ssd_chunked) and the Pallas kernel must match.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, B, C, initial_state=None):
+    """x: (b, s, h, p); dt: (b, s, h); A: (h,); B, C: (b, s, g, n).
+    Returns (y (b, s, h, p), final_state (b, g, h/g, n, p))."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hg = h // g
+    xf = x.astype(jnp.float32).reshape(b, s, g, hg, p)
+    dtf = dt.astype(jnp.float32).reshape(b, s, g, hg)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    dec = jnp.exp(dtf * A.astype(jnp.float32).reshape(g, hg))
+
+    h0 = (initial_state.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((b, g, hg, n, p), jnp.float32))
+
+    def step(state, inp):
+        xt, dtt, bt, ct, dect = inp
+        upd = jnp.einsum("bgn,bgk,bgkp->bgknp", bt, dtt, xt)
+        state = state * dect[..., None, None] + upd
+        y = jnp.einsum("bgn,bgknp->bgkp", ct, state)
+        return state, y
+
+    final, ys = jax.lax.scan(
+        step, h0, (xf.transpose(1, 0, 2, 3, 4), dtf.transpose(1, 0, 2, 3),
+                   Bf.transpose(1, 0, 2, 3), Cf.transpose(1, 0, 2, 3),
+                   dec.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    return y.astype(x.dtype), final

@@ -1,0 +1,277 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) cell
+on the production mesh(es); record memory analysis, cost analysis, and the
+collective schedule for the roofline report.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b \
+        --shape train_4k --mesh both --out reports/dryrun
+
+Failures here (sharding mismatch, OOM at compile, unsupported collective)
+are bugs in the system — the CI target is: every applicable cell compiles on
+the 16x16 single-pod mesh AND the 2x16x16 multi-pod mesh.
+"""
+# The dry-run (and ONLY the dry-run) needs 512 placeholder devices so
+# jax.make_mesh can build the production mesh. Must be set before ANY other
+# import — jax locks the device count on first init.
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (SHAPES_BY_NAME, get_config, input_specs,
+                           iter_cells)
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import (batch_shardings,
+                                        decode_state_shardings,
+                                        param_shardings)
+from repro.launch.mesh import make_production_mesh
+from repro.models import abstract_decode_state, abstract_params
+from repro.training import optimizer as opt
+from repro.training.train_step import make_serve_steps, make_train_step
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Any]:
+    """Sum result-shape bytes of every collective op in the optimized HLO."""
+    stats = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (.*)", stripped)
+        if not m:
+            continue
+        rhs = m.group(1)
+        op = None
+        for c in _COLLECTIVES:
+            if re.search(rf"\b{c}(-start|-done)?\(", rhs):
+                op = c
+                break
+        if op is None or f"{op}-done(" in rhs:
+            continue                   # count the -start, skip the -done
+        head = rhs.split(f" {op}", 1)[0]
+        nbytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(head))
+        stats[op]["count"] += 1
+        stats[op]["bytes"] += nbytes
+    stats["total_bytes"] = sum(v["bytes"] for k, v in stats.items()
+                               if isinstance(v, dict))
+    return stats
+
+
+def count_params(params_tree) -> int:
+    import math
+    return sum(math.prod(l.shape) if l.shape else 1
+               for l in jax.tree_util.tree_leaves(params_tree))
+
+
+def active_params(cfg: ModelConfig, params_tree) -> int:
+    total = count_params(params_tree)
+    if cfg.moe is None:
+        return total
+    routed = 0
+    def visit(path, leaf):
+        nonlocal routed
+        import math
+        name = "/".join(str(getattr(k, "key", "")) for k in path)
+        if "moe" in name and re.search(r"w_(gate|up|down)$", name) \
+                and "shared" not in name:
+            routed += math.prod(leaf.shape)
+        return leaf
+    jax.tree_util.tree_map_with_path(visit, params_tree)
+    frac_active = cfg.moe.top_k / cfg.moe.n_experts
+    return int(total - routed * (1.0 - frac_active))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides: Dict[str, Any] = None) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    if overrides:
+        moe_over = {k[4:]: v for k, v in overrides.items()
+                    if k.startswith("moe.")}
+        plain = {k: v for k, v in overrides.items() if "." not in k}
+        cfg = cfg.replace(**plain)
+        if moe_over and cfg.moe is not None:
+            import dataclasses as _dc
+            cfg = cfg.replace(moe=_dc.replace(cfg.moe, **moe_over))
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    t0 = time.time()
+
+    params_abs = abstract_params(cfg)
+    p_shard = param_shardings(cfg, mesh, params_abs)
+    specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        ts = make_train_step(cfg)
+        opt_abs = jax.eval_shape(lambda p: opt.init(p, opt.AdamWConfig()),
+                                 params_abs)
+        o_shard = jax.tree_util.tree_map(
+            lambda l, ref=None: None, opt_abs)
+        from repro.distributed.sharding import opt_state_shardings
+        o_shard = opt_state_shardings(cfg, mesh, opt_abs, params_abs)
+        b_shard = batch_shardings(cfg, mesh, specs)
+        rep = NamedSharding(mesh, P())
+        fn = jax.jit(ts,
+                     in_shardings=(p_shard, o_shard, b_shard),
+                     out_shardings=(p_shard, o_shard, None))
+        with mesh:
+            lowered = fn.lower(params_abs, opt_abs, specs)
+    elif shape.kind == "prefill":
+        prefill_step, _ = make_serve_steps(cfg)
+        b_shard = batch_shardings(cfg, mesh, specs)
+        fn = jax.jit(prefill_step, in_shardings=(p_shard, b_shard),
+                     out_shardings=None)
+        with mesh:
+            lowered = fn.lower(params_abs, specs)
+    else:  # decode
+        _, decode_step = make_serve_steps(cfg)
+        state_abs = abstract_decode_state(cfg, shape.global_batch,
+                                          shape.seq_len)
+        s_shard = decode_state_shardings(cfg, mesh, state_abs)
+        tok_shard = batch_shardings(
+            cfg, mesh, {"token": specs["token"]})["token"]
+        rep = NamedSharding(mesh, P())
+        fn = jax.jit(decode_step,
+                     in_shardings=(p_shard, s_shard, tok_shard, rep),
+                     out_shardings=(None, s_shard))
+        with mesh:
+            lowered = fn.lower(params_abs, state_abs, specs["token"],
+                               specs["cache_len"])
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+    # trip-count-aware accounting (XLA costs a scan body once; this scales
+    # dots/bytes/collectives by known_trip_count along the call graph)
+    from repro.launch.hlo_analysis import analyze_hlo
+    hstats = analyze_hlo(hlo)
+
+    n_params = count_params(params_abs)
+    n_active = active_params(cfg, params_abs)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    model_flops = (6 if shape.kind == "train" else 2) * n_active * tokens
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "overrides": overrides or {},
+        "kind": shape.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": int(n_dev),
+        "ok": True,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "n_params": int(n_params),
+        "n_active_params": int(n_active),
+        "tokens": int(tokens),
+        "model_flops": float(model_flops),
+        "hlo_flops_per_device": float(hstats["dot_flops"]),
+        "hlo_bytes_per_device": float(hstats["bytes_materialized"]),
+        "xla_cost_flops_unscaled": float(cost.get("flops", -1.0)),
+        "xla_cost_bytes_unscaled": float(cost.get("bytes accessed", -1.0)),
+        "collectives": {**hstats["collectives"],
+                        "total_bytes": float(hstats["collective_bytes"]),
+                        "unscaled_total_bytes": coll["total_bytes"]},
+        "memory": {
+            k: int(getattr(mem, k))
+            for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+                      "output_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        },
+    }
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="reports/dryrun")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg overrides, e.g. gqa_mode=tiled moe.dispatch=sort")
+    args = ap.parse_args()
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        overrides[k] = int(v) if v.lstrip("-").isdigit() else v
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    n_ok = n_fail = n_skip = 0
+    for arch, shape, ok, why in iter_cells():
+        if args.arch not in ("all", arch):
+            continue
+        if args.shape not in ("all", shape.name):
+            continue
+        for multi in meshes:
+            tag = f"{arch}__{shape.name}__{'multi' if multi else 'single'}"
+            path = os.path.join(args.out, tag + ".json")
+            if not ok:
+                with open(path, "w") as f:
+                    json.dump({"arch": arch, "shape": shape.name,
+                               "ok": False, "skipped": True,
+                               "reason": why}, f, indent=1)
+                print(f"SKIP {tag}: {why}")
+                n_skip += 1
+                continue
+            try:
+                res = run_cell(arch, shape.name, multi, overrides)
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                print(f"OK   {tag}: compile={res['compile_s']}s "
+                      f"flops/dev={res['hlo_flops_per_device']:.3e} "
+                      f"coll={res['collectives']['total_bytes']:.3e}B")
+                n_ok += 1
+            except Exception as e:  # noqa: BLE001 — report, continue sweep
+                with open(path, "w") as f:
+                    json.dump({"arch": arch, "shape": shape.name,
+                               "mesh": "multi" if multi else "single",
+                               "ok": False,
+                               "error": f"{type(e).__name__}: {e}"},
+                              f, indent=1)
+                print(f"FAIL {tag}: {type(e).__name__}: {e}")
+                traceback.print_exc(limit=3)
+                n_fail += 1
+    print(f"dry-run complete: {n_ok} ok, {n_fail} failed, {n_skip} skipped")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,208 @@
+"""Trip-count-aware cost analysis over compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop (lax.scan) body ONCE,
+which silently undercounts layer-scanned models by n_layers x. This module
+re-derives the three roofline numerators directly from the optimized HLO:
+
+  * dot/conv FLOPs per computation, scaled by the product of enclosing
+    while-loop ``known_trip_count``s (call-graph propagation);
+  * HBM-traffic proxy bytes (same trip-count scaling) under a TPU-like
+    memory model: slice/gather/scatter results always count (reads/writes
+    against HBM-resident buffers); other results count only when they exceed
+    VMEM_BYTES (16 MiB) and must spill. Program arguments/outputs are added
+    by the caller from memory_analysis();
+  * collective payload bytes (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute), same scaling.
+
+This is the "profile" the §Perf loop iterates on (no real-TPU timings in
+this container).
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(%[\w.\-]+|ENTRY\s+%?[\w.\-]+)\s*(\(.*)$")
+_CALL_ATTR_RE = re.compile(r"(?:calls|body|condition|to_apply)=(%[\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+VMEM_BYTES = 16 * 1024 * 1024       # v5e-class VMEM working-set threshold
+_ALWAYS_HBM_OPS = ("dynamic-slice", "gather", "scatter", "copy")
+
+
+def _dims(dimstr: str) -> List[int]:
+    return [int(d) for d in dimstr.split(",") if d]
+
+
+def _first_shape(text: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return "f32", []
+    return m.group(1), _dims(m.group(2))
+
+
+def _all_shapes_bytes(text: str) -> int:
+    total = 0
+    for dt, ds in _SHAPE_RE.findall(text):
+        if dt in _DTYPE_BYTES:
+            total += _DTYPE_BYTES[dt] * math.prod(_dims(ds) or [1])
+    return total
+
+
+class HloCost:
+    def __init__(self, hlo_text: str):
+        self.comps: Dict[str, List[str]] = {}
+        self.entry = None
+        self._parse_computations(hlo_text)
+        self.mults = self._propagate_multipliers()
+
+    # ------------------------------------------------------------ parse
+    def _parse_computations(self, text: str):
+        cur = None
+        for line in text.splitlines():
+            m = _COMP_HDR_RE.match(line)
+            if m and "{" in line and "=" not in line.split("(")[0]:
+                name = m.group(1)
+                if name.startswith("ENTRY"):
+                    name = name.split()[-1]
+                    self.entry = name
+                cur = name
+                self.comps[cur] = [line]
+            elif cur is not None:
+                self.comps[cur].append(line)
+                if line.strip() == "}":
+                    cur = None
+
+    def _propagate_multipliers(self) -> Dict[str, float]:
+        """multiplier[comp] = expected executions per program run."""
+        # edges: comp -> [(callee, factor)]
+        edges: Dict[str, List[Tuple[str, float]]] = defaultdict(list)
+        for comp, lines in self.comps.items():
+            for line in lines:
+                callees = _CALL_ATTR_RE.findall(line)
+                if not callees:
+                    continue
+                trip = 1.0
+                if " while(" in line:
+                    t = _TRIP_RE.search(line)
+                    trip = float(t.group(1)) if t else 1.0
+                for callee in set(callees):
+                    factor = trip if "body=" + callee in line else 1.0
+                    edges[comp].append((callee, factor))
+        mults = defaultdict(float)
+        entry = self.entry or next(iter(self.comps))
+        mults[entry] = 1.0
+        # worklist propagation (call graph is a DAG in HLO)
+        order = [entry]
+        seen = {entry}
+        i = 0
+        while i < len(order):
+            c = order[i]
+            i += 1
+            for callee, factor in edges.get(c, []):
+                mults[callee] += mults[c] * factor
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+        return dict(mults)
+
+    # ------------------------------------------------------- accounting
+    def _comp_shapes(self, comp: str) -> Dict[str, Tuple[str, List[int]]]:
+        shapes: Dict[str, Tuple[str, List[int]]] = {}
+        hdr = self.comps[comp][0]
+        for pm in re.finditer(r"(%?[\w.\-]+):\s*(\([^)]*\)|\w+\[[\d,]*\])",
+                              hdr):
+            name, tystr = pm.group(1), pm.group(2)
+            if not name.startswith("%"):
+                name = "%" + name
+            shapes[name] = _first_shape(tystr)
+        for line in self.comps[comp]:
+            m = _DEF_RE.match(line)
+            if m:
+                shapes[m.group(1)] = _first_shape(m.group(2))
+        return shapes
+
+    def analyze(self) -> Dict[str, float]:
+        flops = 0.0
+        bytes_mat = 0.0
+        coll = {k: {"count": 0.0, "bytes": 0.0} for k in _COLLECTIVES}
+        for comp, lines in self.comps.items():
+            mult = self.mults.get(comp, 0.0)
+            if mult == 0.0:
+                continue
+            shapes = self._comp_shapes(comp)
+            for line in lines:
+                m = _DEF_RE.match(line)
+                if not m:
+                    continue
+                name, rhs = m.group(1), m.group(2)
+                opm = re.match(r"(?:\([^)]*\)|[\w\[\]{},]+)\s+([\w\-]+)\(",
+                               rhs)
+                op = opm.group(1) if opm else ""
+                rdtype, rdims = _first_shape(rhs)
+                rbytes = _DTYPE_BYTES.get(rdtype, 4) * math.prod(rdims or [1])
+                if op == "dynamic-update-slice":
+                    # in-place update: only the update operand is written
+                    ops_ = re.findall(r"(%[\w.\-]+)", rhs)
+                    upd = ops_[1] if len(ops_) > 1 else None
+                    ub = rbytes
+                    if upd and upd in shapes:
+                        udt, udims = shapes[upd]
+                        ub = _DTYPE_BYTES.get(udt, 4) * math.prod(udims or [1])
+                    bytes_mat += ub * mult
+                elif op in _ALWAYS_HBM_OPS:
+                    bytes_mat += rbytes * mult
+                elif op not in ("parameter", "constant", "tuple",
+                                "get-tuple-element", "bitcast", "after-all") \
+                        and rbytes > VMEM_BYTES:
+                    bytes_mat += rbytes * mult   # spills past VMEM
+                if op == "dot":
+                    cm = _CONTRACT_RE.search(rhs)
+                    contract = _dims(cm.group(1)) if cm else []
+                    args = re.findall(r"\((%[\w.\-]+)[,)]|,\s*(%[\w.\-]+)[,)]",
+                                      rhs)
+                    ops_ = [a or b for a, b in args]
+                    lhs = ops_[0] if ops_ else None
+                    csize = 1
+                    if lhs and lhs in shapes:
+                        lshape = shapes[lhs][1]
+                        for ci in contract:
+                            if ci < len(lshape):
+                                csize *= lshape[ci]
+                    flops += 2.0 * math.prod(rdims or [1]) * csize * mult
+                elif op == "convolution":
+                    # conservative: 2 * prod(result) * prod(kernel non-O dims)
+                    ops_ = re.findall(r"(%[\w.\-]+)", rhs.split(")")[0])
+                    kshape = shapes.get(ops_[1], ("f32", []))[1] \
+                        if len(ops_) > 1 else []
+                    kprod = math.prod(kshape or [1])
+                    odim = max(rdims[-1] if rdims else 1, 1)
+                    flops += 2.0 * math.prod(rdims or [1]) * \
+                        max(kprod // max(odim, 1), 1) * mult
+                for c in _COLLECTIVES:
+                    if re.search(rf"\b{c}(-start)?\(", rhs):
+                        coll[c]["count"] += mult
+                        coll[c]["bytes"] += _all_shapes_bytes(
+                            rhs.split("(")[0]) * mult
+                        break
+        total_coll = sum(v["bytes"] for v in coll.values())
+        return {"dot_flops": flops, "bytes_materialized": bytes_mat,
+                "collective_bytes": total_coll,
+                "collectives": {k: v for k, v in coll.items() if v["count"]}}
+
+
+def analyze_hlo(hlo_text: str) -> Dict[str, float]:
+    return HloCost(hlo_text).analyze()

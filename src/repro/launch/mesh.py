@@ -1,0 +1,21 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — critical because smoke tests must see 1 device
+while the dry-run forces 512 host devices via XLA_FLAGS before any import.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """1x1 mesh over whatever the host has — smoke tests / examples."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))

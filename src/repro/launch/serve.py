@@ -1,0 +1,71 @@
+"""Serving driver: AgentRM middleware over the JAX inference engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
+        --agents 3 --turns 9
+
+Wires every paper component end to end: agents submit turns -> MLFQ +
+admission control -> engine lanes (continuous-batching slots) -> CLM
+accumulates each agent's context with PSI injection; the reaper watches
+heartbeats emitted per decode step.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import get_config, get_smoke_config
+from repro.core import AgentRM, AgentRMConfig
+from repro.core.scheduler.task import QueueClass
+from repro.models import build
+from repro.serving import EngineBackend, InferenceEngine
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--agents", type=int, default=3)
+    ap.add_argument("--turns", type=int, default=9)
+    ap.add_argument("--lanes", type=int, default=2)
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cfg = cfg.replace(remat=False)
+    model = build(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    engine = InferenceEngine(cfg, params, max_slots=args.lanes, max_len=192)
+    backend = EngineBackend(engine, max_new_tokens=args.max_new_tokens)
+    rm = AgentRM(backend, AgentRMConfig(lanes=args.lanes,
+                                        detect_after_s=20.0))
+
+    t0 = time.time()
+    handles = []
+    for i in range(args.turns):
+        agent = f"agent-{i % args.agents}"
+        qc = (QueueClass.INTERACTIVE, QueueClass.SUBAGENT,
+              QueueClass.BACKGROUND)[i % 3]
+        handles.append((agent, rm.submit(agent, f"turn {i}: do the thing",
+                                         queue_class=qc)))
+    lat = []
+    for agent, h in handles:
+        out = h.result(timeout=300)
+        lat.append(h.turn.end - h.turn.arrival)
+        print(f"[serve] {agent} -> {out[:48]}  ({lat[-1]*1000:.0f} ms)")
+    snap = rm.monitor.snapshot()
+    lat.sort()
+    print(f"[serve] {args.turns} turns in {time.time()-t0:.1f}s | "
+          f"p50 {lat[len(lat)//2]*1000:.0f}ms "
+          f"p95 {lat[int(0.95*(len(lat)-1))]*1000:.0f}ms | "
+          f"reaped {snap.zombies_reaped} recovered {snap.recoveries}")
+    for agent_id, clm in rm.clm.items():
+        print(f"[serve] {agent_id}: ctx={clm.window_tokens} tok, "
+              f"psi='{clm.psi_message()[:64]}...'")
+    rm.shutdown()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

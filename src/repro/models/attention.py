@@ -1,0 +1,241 @@
+"""Attention blocks: GQA/MQA/MHA with RoPE, and DeepSeek-V2 MLA.
+
+Two execution modes per block:
+  * full   — train / prefill over (b, s) tokens; returns new KV for caching.
+  * decode — one query token against a cache at dynamic length ``cache_len``.
+
+MLA caches the *compressed* latent (c_kv, k_rope) and uses the matrix-
+absorption trick at decode, which is the whole point of MLA (KV bytes
+independent of n_heads).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.models.layers import _init, apply_rope, attention, rope_tables, simple_attention
+
+
+# ----------------------------- GQA ----------------------------------------
+
+def init_gqa(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _init(ks[0], (d, hq * hd), dtype=dtype),
+        "wk": _init(ks[1], (d, hkv * hd), dtype=dtype),
+        "wv": _init(ks[2], (d, hkv * hd), dtype=dtype),
+        "wo": _init(ks[3], (hq * hd, d), dtype=dtype),
+    }
+
+
+def gqa_full(params, x, cfg: ModelConfig, *, causal=True, positions=None,
+             window: int = 0, return_kv=False):
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = (x @ params["wq"]).reshape(b, s, hq, hd)
+    k = (x @ params["wk"]).reshape(b, s, hkv, hd)
+    v = (x @ params["wv"]).reshape(b, s, hkv, hd)
+    if cfg.rotary_pct > 0:
+        pos = positions if positions is not None else jnp.arange(s)
+        rot = int(hd * cfg.rotary_pct)
+        cos, sin = rope_tables(pos, rot, cfg.rope_theta)
+        q = apply_rope(q, cos, sin, cfg.rotary_pct)
+        k = apply_rope(k, cos, sin, cfg.rotary_pct)
+    o = attention(q, k, v, causal=causal, use_pallas=cfg.use_pallas,
+                  window=window, gqa_mode=cfg.gqa_mode,
+                  q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block,
+                  f32_inputs=cfg.attn_f32_inputs)
+    out = o.reshape(b, s, hq * hd) @ params["wo"]
+    return (out, (k, v)) if return_kv else out
+
+
+def gqa_cross(params, x, kv, cfg: ModelConfig):
+    """Cross-attention: kv = (k, v) precomputed from the encoder."""
+    b, s, _ = x.shape
+    hq, hd = cfg.n_heads, cfg.resolved_head_dim
+    q = (x @ params["wq"]).reshape(b, s, hq, hd)
+    k, v = kv
+    o = attention(q, k, v, causal=False, use_pallas=cfg.use_pallas,
+                  gqa_mode=cfg.gqa_mode, q_block=cfg.attn_q_block,
+                  kv_block=cfg.attn_kv_block)
+    return o.reshape(b, s, hq * hd) @ params["wo"]
+
+
+def gqa_decode(params, x, cache_k, cache_v, cache_len, cfg: ModelConfig,
+               window: int = 0):
+    """x: (b, 1, d); cache_k/v: (b, S, hkv, hd); returns out + updated cache.
+
+    cache_len may be a scalar (dry-run / lockstep decode) or a (b,) vector
+    (continuous batching — per-slot cache depths)."""
+    b = x.shape[0]
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    cache_len = jnp.asarray(cache_len)
+    per_slot = cache_len.ndim == 1
+    q = (x @ params["wq"]).reshape(b, 1, hq, hd)
+    k = (x @ params["wk"]).reshape(b, 1, hkv, hd)
+    v = (x @ params["wv"]).reshape(b, 1, hkv, hd)
+    if cfg.rotary_pct > 0:
+        pos = cache_len.reshape(b, 1) if per_slot else \
+            jnp.full((1,), cache_len)
+        rot = int(hd * cfg.rotary_pct)
+        cos, sin = rope_tables(pos, rot, cfg.rope_theta)
+        q = apply_rope(q, cos, sin, cfg.rotary_pct)
+        k = apply_rope(k, cos, sin, cfg.rotary_pct)
+    if per_slot:
+        rows = jnp.arange(b)
+        cache_k = cache_k.at[rows, cache_len].set(
+            k[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[rows, cache_len].set(
+            v[:, 0].astype(cache_v.dtype))
+    else:
+        cache_k = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, k.astype(cache_k.dtype), cache_len, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, v.astype(cache_v.dtype), cache_len, axis=1)
+    if cfg.use_pallas and not per_slot:
+        from repro.kernels.decode_attention import ops as da
+        o = da.decode_attention(q, cache_k, cache_v, kv_len=cache_len + 1,
+                                q_offset_for_window=(cache_len, window))
+    else:
+        # NOTE: never tile the KV cache at decode — measured 8x cache
+        # materialization + 6x collectives (EXPERIMENTS.md §Perf C2);
+        # grouped attention reads the hkv-wide cache directly, with the
+        # head pairing matched to the full path's layout.
+        pairing = "g_major" if cfg.gqa_mode == "tiled" else "kv_major"
+        o = simple_attention(q, cache_k.astype(q.dtype),
+                             cache_v.astype(q.dtype),
+                             causal=False, kv_len=cache_len + 1,
+                             window=window, f32_inputs=cfg.attn_f32_inputs,
+                             pairing=pairing)
+    out = o.reshape(b, 1, hq * hd) @ params["wo"]
+    return out, (cache_k, cache_v)
+
+
+def gqa_decode_ring(params, x, cache_k, cache_v, cache_len, cfg: ModelConfig):
+    """Sliding-window decode against a ring-buffer cache (zamba2 long ctx).
+
+    cache size == window; entry for absolute position p lives at p % W.
+    Once the ring is full every slot is a valid (in-window) key.
+    """
+    b = x.shape[0]
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    w = cache_k.shape[1]
+    q = (x @ params["wq"]).reshape(b, 1, hq, hd)
+    k = (x @ params["wk"]).reshape(b, 1, hkv, hd)
+    v = (x @ params["wv"]).reshape(b, 1, hkv, hd)
+    if cfg.rotary_pct > 0:
+        pos = jnp.full((1,), cache_len)
+        rot = int(hd * cfg.rotary_pct)
+        cos, sin = rope_tables(pos, rot, cfg.rope_theta)
+        q = apply_rope(q, cos, sin, cfg.rotary_pct)
+        k = apply_rope(k, cos, sin, cfg.rotary_pct)
+    write = jnp.mod(cache_len, w)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), write, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), write, axis=1)
+    kv_len = jnp.minimum(cache_len + 1, w)
+    pairing = "g_major" if cfg.gqa_mode == "tiled" else "kv_major"
+    o = simple_attention(q, cache_k.astype(q.dtype), cache_v.astype(q.dtype),
+                         causal=False, kv_len=kv_len, pairing=pairing)
+    out = o.reshape(b, 1, hq * hd) @ params["wo"]
+    return out, (cache_k, cache_v)
+
+
+# ----------------------------- MLA ----------------------------------------
+
+def init_mla(key, cfg: ModelConfig, dtype=jnp.float32):
+    m: MLAConfig = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": _init(ks[0], (d, h * qk), dtype=dtype),
+        # joint down-projection: [c_kv (rank) | k_rope (rope_dim)]
+        "w_dkv": _init(ks[1], (d, m.kv_lora_rank + m.qk_rope_head_dim), dtype=dtype),
+        "kv_norm": jnp.zeros((m.kv_lora_rank,), dtype=dtype),
+        # up-projections from the latent: per head [k_nope | v]
+        "w_uk": _init(ks[2], (m.kv_lora_rank, h * m.qk_nope_head_dim), dtype=dtype),
+        "w_uv": _init(ks[3], (m.kv_lora_rank, h * m.v_head_dim), dtype=dtype),
+        "wo": _init(ks[4], (h * m.v_head_dim, d), dtype=dtype),
+    }
+
+
+def _mla_qkv(params, x, cfg: ModelConfig, positions):
+    from repro.models.layers import rms_norm
+    m: MLAConfig = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = (x @ params["wq"]).reshape(b, s, h, qk)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    dkv = x @ params["w_dkv"]
+    c_kv = rms_norm(dkv[..., : m.kv_lora_rank], params["kv_norm"], cfg.norm_eps)
+    k_rope = dkv[..., m.kv_lora_rank:]                    # (b, s, rope) MQA-like
+    cos, sin = rope_tables(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[..., None, :], cos, sin)[..., 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_full(params, x, cfg: ModelConfig, *, positions=None, return_kv=False):
+    """Training/prefill path: decompress K/V per head (standard formulation)."""
+    m: MLAConfig = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    pos = positions if positions is not None else jnp.arange(s)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, x, cfg, pos)
+    k_nope = (c_kv @ params["w_uk"]).reshape(b, s, h, m.qk_nope_head_dim)
+    v = (c_kv @ params["w_uv"]).reshape(b, s, h, m.v_head_dim)
+    # assemble full-width q/k: [nope | rope(shared k)]
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, m.qk_rope_head_dim))],
+        axis=-1)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    # value head_dim (v) differs from qk head_dim — the generic attention path
+    # supports dv != dqk (blocked online-softmax at long seq).
+    o = attention(q_full, k_full, v, causal=True, scale=scale,
+                  use_pallas=cfg.use_pallas, q_block=cfg.attn_q_block,
+                  kv_block=cfg.attn_kv_block)
+    out = o.reshape(b, s, h * m.v_head_dim) @ params["wo"]
+    return (out, (c_kv, k_rope)) if return_kv else out
+
+
+def mla_decode(params, x, cache_ckv, cache_krope, cache_len, cfg: ModelConfig):
+    """Absorbed decode: scores in latent space, cache holds (c_kv, k_rope).
+
+    cache_ckv: (b, S, rank); cache_krope: (b, S, rope_dim).
+    """
+    m: MLAConfig = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    pos = jnp.full((1,), cache_len)
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv(params, x, cfg, pos)
+    cache_ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache_ckv, c_kv_new.astype(cache_ckv.dtype), cache_len, axis=1)
+    cache_krope = jax.lax.dynamic_update_slice_in_dim(
+        cache_krope, k_rope_new.astype(cache_krope.dtype), cache_len, axis=1)
+    # absorb W_uk into q: q_lat (b,1,h,rank)
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    s_lat = jnp.einsum("bqhr,bkr->bhqk", q_lat.astype(jnp.float32),
+                       cache_ckv.astype(jnp.float32))
+    s_rope = jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                        cache_krope.astype(jnp.float32))
+    s = (s_lat + s_rope) * scale
+    kpos = jnp.arange(cache_ckv.shape[1])
+    s = jnp.where((kpos < cache_len + 1)[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    # output in latent space, then up-project through W_uv (absorbed into wo)
+    o_lat = jnp.einsum("bhqk,bkr->bqhr", p.astype(cache_ckv.dtype), cache_ckv)
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    o = jnp.einsum("bqhr,rhd->bqhd", o_lat, w_uv)
+    out = o.reshape(b, 1, h * m.v_head_dim) @ params["wo"]
+    return out, (cache_ckv, cache_krope)

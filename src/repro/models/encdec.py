@@ -1,0 +1,177 @@
+"""Whisper-style encoder-decoder backbone (conv audio frontend is a STUB:
+``frame_embeds`` (b, enc_len, d) arrive precomputed, per the assignment).
+
+Learned absolute positions (rotary_pct=0 in the config), bidirectional
+encoder, causal decoder with cross-attention. Decoder position table sized to
+MAX_DEC_POS=32768 (largest assigned decoder shape; long_500k is skipped for
+this full-attention arch).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models.layers import (_init, apply_mlp, cast_floats,
+                                 cross_entropy_loss, init_mlp, rms_norm)
+from repro.models.transformer import _unembed
+
+MAX_DEC_POS = 32768
+
+
+def _enc_layer(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": jnp.zeros((cfg.d_model,), dtype),
+        "attn": attn_mod.init_gqa(k1, cfg, dtype),
+        "mlp_norm": jnp.zeros((cfg.d_model,), dtype),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.act, dtype),
+    }
+
+
+def _dec_layer(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = _enc_layer(jax.random.fold_in(key, 7), cfg, dtype)
+    p["cross_norm"] = jnp.zeros((cfg.d_model,), dtype)
+    p["cross"] = attn_mod.init_gqa(k3, cfg, dtype)
+    return p
+
+
+def init_params(rng, cfg: ModelConfig) -> Dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(rng, 8)
+    return {
+        "embed": _init(keys[0], (cfg.vocab_size, cfg.d_model), scale=0.02,
+                       dtype=dtype),
+        "dec_pos": _init(keys[1], (MAX_DEC_POS, cfg.d_model), scale=0.02,
+                         dtype=dtype),
+        "enc_pos": _init(keys[2], (cfg.enc_len, cfg.d_model), scale=0.02,
+                         dtype=dtype),
+        "enc_layers": jax.vmap(lambda k: _enc_layer(k, cfg, dtype))(
+            jax.random.split(keys[3], cfg.n_enc_layers)),
+        "enc_final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "layers": jax.vmap(lambda k: _dec_layer(k, cfg, dtype))(
+            jax.random.split(keys[4], cfg.n_layers)),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "lm_head": _init(keys[5], (cfg.d_model, cfg.vocab_size), dtype=dtype),
+    }
+
+
+def encode(params, frame_embeds, cfg: ModelConfig):
+    x = frame_embeds.astype(cfg.compute_dtype)
+    x = x + params["enc_pos"][: x.shape[1]].astype(x.dtype)
+
+    def body(h, lp):
+        a = attn_mod.gqa_full(
+            lp["attn"], rms_norm(h, lp["attn_norm"], cfg.norm_eps), cfg,
+            causal=False)
+        h = h + a
+        h = h + apply_mlp(lp["mlp"], rms_norm(h, lp["mlp_norm"], cfg.norm_eps),
+                          cfg.act)
+        return h, None
+
+    from repro.models.transformer import remat_wrap
+    body = remat_wrap(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def _dec_embed(params, tokens, cfg, offset=0):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    pos = jax.lax.dynamic_slice_in_dim(params["dec_pos"], offset, x.shape[1])
+    return x + pos.astype(x.dtype)
+
+
+def forward(params, batch, cfg: ModelConfig):
+    params = cast_floats(params, cfg.compute_dtype)
+    enc = encode(params, batch["frame_embeds"], cfg)
+    x = _dec_embed(params, batch["tokens"], cfg)
+
+    def body(h, lp):
+        a = attn_mod.gqa_full(
+            lp["attn"], rms_norm(h, lp["attn_norm"], cfg.norm_eps), cfg,
+            causal=True)
+        h = h + a
+        c = attn_mod.gqa_cross(
+            lp["cross"], rms_norm(h, lp["cross_norm"], cfg.norm_eps),
+            _cross_kv(lp["cross"], enc, cfg), cfg)
+        h = h + c
+        h = h + apply_mlp(lp["mlp"], rms_norm(h, lp["mlp_norm"], cfg.norm_eps),
+                          cfg.act)
+        return h, None
+
+    from repro.models.transformer import remat_wrap
+    body = remat_wrap(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _unembed(params, x, cfg), {"moe_aux": jnp.float32(0),
+                                      "moe_z": jnp.float32(0)}
+
+
+def _cross_kv(cp, enc, cfg):
+    b, s, _ = enc.shape
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    k = (enc @ cp["wk"]).reshape(b, s, hkv, hd)
+    v = (enc @ cp["wv"]).reshape(b, s, hkv, hd)
+    return k, v
+
+
+def loss(params, batch, cfg: ModelConfig):
+    logits, metrics = forward(params, batch, cfg)
+    ce = cross_entropy_loss(logits, batch["labels"])
+    return ce, dict(metrics, ce=ce)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    ct = jnp.dtype(cfg.kv_cache_dtype or cfg.compute_dtype)
+    h, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, max_len, h, hd), ct),
+        "v": jnp.zeros((cfg.n_layers, batch, max_len, h, hd), ct),
+        "cross_k": jnp.zeros((cfg.n_layers, batch, cfg.enc_len, h, hd), ct),
+        "cross_v": jnp.zeros((cfg.n_layers, batch, cfg.enc_len, h, hd), ct),
+    }
+
+
+def init_cross_cache(params, frame_embeds, cfg: ModelConfig):
+    """Run the encoder and precompute per-layer cross K/V (session start)."""
+    params = cast_floats(params, cfg.compute_dtype)
+    enc = encode(params, frame_embeds, cfg)
+
+    def body(_, lp):
+        return None, _cross_kv(lp["cross"], enc, cfg)
+
+    _, (ck, cv) = jax.lax.scan(body, None, params["layers"])
+    return ck, cv
+
+
+def decode_step(params, state: Dict, token, cache_len, cfg: ModelConfig):
+    params = cast_floats(params, cfg.compute_dtype)
+    b = token.shape[0]
+    x = jnp.take(params["embed"], token, axis=0).astype(cfg.compute_dtype)
+    x = x + jax.lax.dynamic_slice_in_dim(
+        params["dec_pos"], cache_len, 1).astype(x.dtype)
+
+    def body(h, xs):
+        lp, sk, sv, ck, cv = xs
+        a, (sk, sv) = attn_mod.gqa_decode(
+            lp["attn"], rms_norm(h, lp["attn_norm"], cfg.norm_eps),
+            sk, sv, cache_len, cfg)
+        h = h + a
+        c = attn_mod.gqa_cross(
+            lp["cross"], rms_norm(h, lp["cross_norm"], cfg.norm_eps),
+            (ck, cv), cfg)
+        h = h + c
+        h = h + apply_mlp(lp["mlp"], rms_norm(h, lp["mlp_norm"], cfg.norm_eps),
+                          cfg.act)
+        return h, (sk, sv)
+
+    x, (sk, sv) = jax.lax.scan(
+        body, x, (params["layers"], state["k"], state["v"],
+                  state["cross_k"], state["cross_v"]))
+    state = dict(state, k=sk, v=sv)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _unembed(params, x, cfg), state

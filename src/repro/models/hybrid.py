@@ -1,0 +1,166 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + ONE weight-shared attention block.
+
+Layer layout for n_layers = G*attn_every + tail:
+  repeat G times: [shared attention block] -> attn_every mamba layers
+  then `tail` trailing mamba layers.
+The shared block's *weights* are reused at every application but each
+application keeps its own KV cache (activations differ).
+
+Scan structure: outer scan over G groups (mamba params stacked (G, E, ...)),
+inner scan over the E in-group layers — a single traced mamba layer and a
+single traced attention block in the HLO.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import ssd as ssd_mod
+from repro.models.layers import _init, apply_mlp, cast_floats, init_mlp, rms_norm
+from repro.models.transformer import _embed, _unembed
+
+
+def _layout(cfg: ModelConfig):
+    g = cfg.n_layers // cfg.attn_every
+    tail = cfg.n_layers - g * cfg.attn_every
+    return g, cfg.attn_every, tail
+
+
+def init_params(rng, cfg: ModelConfig) -> Dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    g, e, tail = _layout(cfg)
+    keys = jax.random.split(rng, 8)
+    mamba_one = lambda k: {
+        "norm": jnp.zeros((cfg.d_model,), dtype),
+        "mamba": ssd_mod.init_mamba(k, cfg, dtype)}
+    p: Dict = {
+        "embed": _init(keys[0], (cfg.vocab_size, cfg.d_model), scale=0.02,
+                       dtype=dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "lm_head": _init(keys[1], (cfg.d_model, cfg.vocab_size), dtype=dtype),
+        "shared": {
+            "attn_norm": jnp.zeros((cfg.d_model,), dtype),
+            "attn": attn_mod.init_gqa(keys[2], cfg, dtype),
+            "mlp_norm": jnp.zeros((cfg.d_model,), dtype),
+            "mlp": init_mlp(keys[3], cfg.d_model, cfg.d_ff, cfg.act, dtype),
+        },
+        "groups": jax.vmap(jax.vmap(mamba_one))(
+            jax.random.split(keys[4], g * e).reshape(g, e, 2)),
+    }
+    if tail:
+        p["tail"] = jax.vmap(mamba_one)(jax.random.split(keys[5], tail))
+    return p
+
+
+def _shared_block_full(sp, x, cfg, window=0):
+    a = attn_mod.gqa_full(sp["attn"],
+                          rms_norm(x, sp["attn_norm"], cfg.norm_eps), cfg,
+                          causal=True, window=window)
+    x = x + a
+    m = apply_mlp(sp["mlp"], rms_norm(x, sp["mlp_norm"], cfg.norm_eps), cfg.act)
+    return x + m
+
+
+def _mamba_scan(x, stacked, cfg):
+    def body(h, lp):
+        y, _ = ssd_mod.mamba_full(
+            lp["mamba"], rms_norm(h, lp["norm"], cfg.norm_eps), cfg)
+        return h + y, None
+    from repro.models.transformer import remat_wrap
+    body = remat_wrap(body, cfg)
+    x, _ = jax.lax.scan(body, x, stacked)
+    return x
+
+
+def forward(params, batch, cfg: ModelConfig):
+    g, e, tail = _layout(cfg)
+    params = cast_floats(params, cfg.compute_dtype)
+    x = _embed(params, batch["tokens"], cfg)
+    # full attention within train/prefill seqs (window only binds at decode
+    # beyond 32k; train_4k/prefill_32k fit inside the window anyway)
+    win = 0 if x.shape[1] <= (cfg.attn_window or 1 << 62) else cfg.attn_window
+
+    def group(h, gp):
+        h = _shared_block_full(params["shared"], h, cfg, window=win)
+        return _mamba_scan(h, gp, cfg), None
+
+    from repro.models.transformer import remat_wrap
+    grp = remat_wrap(group, cfg)
+    x, _ = jax.lax.scan(grp, x, params["groups"])
+    if tail:
+        x = _mamba_scan(x, params["tail"], cfg)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _unembed(params, x, cfg), {"moe_aux": jnp.float32(0),
+                                      "moe_z": jnp.float32(0)}
+
+
+def loss(params, batch, cfg: ModelConfig):
+    from repro.models.layers import cross_entropy_loss
+    logits, metrics = forward(params, batch, cfg)
+    ce = cross_entropy_loss(logits, batch["labels"])
+    return ce, dict(metrics, ce=ce)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    ct = jnp.dtype(cfg.kv_cache_dtype or cfg.compute_dtype)
+    g, e, tail = _layout(cfg)
+    m = cfg.ssm
+    d_in = m.expand * cfg.d_model
+    h = d_in // m.head_dim
+    conv_dim = d_in + 2 * m.n_groups * m.d_state
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    w = min(max_len, cfg.attn_window) if cfg.attn_window else max_len
+    st = {
+        "attn_k": jnp.zeros((g, batch, w, hkv, hd), ct),
+        "attn_v": jnp.zeros((g, batch, w, hkv, hd), ct),
+        "conv": jnp.zeros((g, e, batch, m.conv_kernel - 1, conv_dim), ct),
+        "ssm": jnp.zeros((g, e, batch, m.n_groups, h // m.n_groups,
+                          m.d_state, m.head_dim), jnp.float32),
+    }
+    if tail:
+        st["tail_conv"] = jnp.zeros((tail, batch, m.conv_kernel - 1, conv_dim), ct)
+        st["tail_ssm"] = jnp.zeros((tail, batch, m.n_groups, h // m.n_groups,
+                                    m.d_state, m.head_dim), jnp.float32)
+    return st
+
+
+def _mamba_decode_scan(x, stacked, conv, ssm, cfg):
+    def body(h, xs):
+        lp, cs, ss = xs
+        y, (cs, ss) = ssd_mod.mamba_decode(
+            lp["mamba"], rms_norm(h, lp["norm"], cfg.norm_eps), (cs, ss), cfg)
+        return h + y, (cs, ss)
+    return jax.lax.scan(body, x, (stacked, conv, ssm))
+
+
+def decode_step(params, state: Dict, token, cache_len, cfg: ModelConfig):
+    g, e, tail = _layout(cfg)
+    params = cast_floats(params, cfg.compute_dtype)
+    x = _embed(params, token, cfg)
+    sp = params["shared"]
+
+    def group(h, xs):
+        gp, ak, av, conv, ssm = xs
+        a, (ak, av) = attn_mod.gqa_decode_ring(
+            sp["attn"], rms_norm(h, sp["attn_norm"], cfg.norm_eps),
+            ak, av, cache_len, cfg)
+        h = h + a
+        h = h + apply_mlp(sp["mlp"], rms_norm(h, sp["mlp_norm"], cfg.norm_eps),
+                          cfg.act)
+        h, (conv, ssm) = _mamba_decode_scan(h, gp, conv, ssm, cfg)
+        return h, (ak, av, conv, ssm)
+
+    x, (ak, av, conv, ssm) = jax.lax.scan(
+        group, x, (params["groups"], state["attn_k"], state["attn_v"],
+                   state["conv"], state["ssm"]))
+    state = dict(state, attn_k=ak, attn_v=av, conv=conv, ssm=ssm)
+    if tail:
+        x, (tc, ts) = _mamba_decode_scan(
+            x, params["tail"], state["tail_conv"], state["tail_ssm"], cfg)
+        state = dict(state, tail_conv=tc, tail_ssm=ts)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _unembed(params, x, cfg), state

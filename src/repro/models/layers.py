@@ -1,0 +1,280 @@
+"""Core layers: norms, rotary embeddings, blocked attention, MLPs.
+
+Everything is purely functional: params are nested dicts of jnp arrays,
+``init_*`` builds them, ``apply``-style functions consume them. Blocked
+attention is the XLA-level flash formulation (online softmax over KV tiles);
+the Pallas kernels in ``repro.kernels`` implement the same contract for TPU
+and are swapped in via ``cfg.use_pallas``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+def cast_floats(tree, dtype):
+    """Cast float leaves to the compute dtype (mixed-precision boundary).
+
+    Norm scales / A_log / dt_bias re-upcast to f32 internally where needed.
+    """
+    dtype = jnp.dtype(dtype)
+
+    def c(x):
+        return x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x
+
+    return jax.tree_util.tree_map(c, tree)
+
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (partial-rotary supported; chatglm3 "RoPE 2d"
+# == rotary over the first half of head_dim).
+# ---------------------------------------------------------------------------
+
+def rope_tables(positions, rot_dim: int, theta: float):
+    """positions: (...,) int -> cos/sin of shape (..., rot_dim//2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin, rotary_pct: float = 1.0):
+    """x: (b, s, h, d); cos/sin: (b, s, rot//2) or (s, rot//2)."""
+    if rotary_pct <= 0.0:
+        return x
+    d = x.shape[-1]
+    rot = int(d * rotary_pct)
+    rot -= rot % 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    # cos/sin: (..., s, rot//2); insert the head axis so trailing-dim
+    # broadcasting aligns (s, 1, r2) against x's (b, s, h, r2)
+    cos = jnp.expand_dims(cos, -2).astype(x.dtype)
+    sin = jnp.expand_dims(sin, -2).astype(x.dtype)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([out, xp], axis=-1) if rot < d else out
+
+
+# ---------------------------------------------------------------------------
+# Attention — blocked (flash-style) for train/prefill, simple for decode.
+# ---------------------------------------------------------------------------
+
+def simple_attention(q, k, v, *, causal: bool, kv_len=None, q_offset=0,
+                     scale: Optional[float] = None, window: int = 0,
+                     f32_inputs: bool = True, pairing: str = "kv_major"):
+    """Reference attention. q: (b, sq, hq, d), k: (b, skv, hkv, d),
+    v: (b, skv, hkv, dv) — dv may differ from d (MLA).
+
+    kv_len: optional scalar — positions >= kv_len are masked (decode caches).
+    window: optional sliding window (0 = full).
+    pairing: which kv head q-head h attends to — "kv_major": h // g
+    (classic GQA layout) or "g_major": h % hkv (the tiled-KV layout; decode
+    must use this when the full paths run gqa_mode="tiled" so prefill and
+    decode realize the SAME model).
+    """
+    b, sq, hq, d = q.shape
+    hkv, dv = k.shape[2], v.shape[-1]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    if pairing == "g_major":
+        qg = q.reshape(b, sq, g, hkv, d).swapaxes(2, 3)
+    else:
+        qg = q.reshape(b, sq, hkv, g, d)
+    if sq > 1:
+        # prefill/train only: decode (sq==1) measured worse with resharding
+        # copies around the tiny q (EXPERIMENTS.md §Perf C0c)
+        from repro.distributed import maybe_constrain
+        qg = maybe_constrain(qg, ("data", None, "model", None, None))
+        k = maybe_constrain(k, ("data", None, "model", None))
+        v = maybe_constrain(v, ("data", None, "model", None))
+    if f32_inputs:
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+    else:
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                       preferred_element_type=jnp.float32) * scale
+    kpos = jnp.arange(k.shape[1])
+    qpos = q_offset + jnp.arange(sq)
+    mask = jnp.ones((sq, k.shape[1]), dtype=bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    mask = mask[None, None, None]              # (1,1,1,sq,skv)
+    if kv_len is not None:
+        kv_len = jnp.asarray(kv_len)
+        if kv_len.ndim == 0:                   # uniform cache length
+            mask = mask & (kpos < kv_len)[None, None, None, None, :]
+        else:                                  # per-slot lengths (b,)
+            mask = mask & (kpos[None, :] < kv_len[:, None])[
+                :, None, None, None, :]
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    if pairing == "g_major":
+        o = o.swapaxes(2, 3)                   # back to (b, sq, g, hkv, dv)
+    return o.reshape(b, sq, hq, dv)
+
+
+def blocked_attention(q, k, v, *, causal: bool, q_block: int = 1024,
+                      kv_block: int = 1024, q_offset: int = 0,
+                      scale: Optional[float] = None,
+                      f32_inputs: bool = True):
+    """Flash-style attention with online softmax, O(block^2) live memory.
+
+    q: (b, sq, hq, d); k, v: (b, skv, hkv, d) with hq % hkv == 0.
+    Outer scan over query tiles, inner scan over KV tiles; causal tiles that
+    lie strictly above the diagonal are still *computed* then masked (static
+    scan lengths) — the MODEL_FLOPS/HLO_FLOPS ratio in §Roofline accounts for
+    this ~2x and the §Perf log shows the skip-upper-tiles optimization.
+    """
+    b, sq, hq, d = q.shape
+    skv, hkv, dv = k.shape[1], k.shape[2], v.shape[-1]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, skv)
+    if sq % q_block or skv % kv_block:
+        raise ValueError(f"seq {sq}/{skv} not divisible by blocks "
+                         f"{q_block}/{kv_block}")
+    nq, nk = sq // q_block, skv // kv_block
+
+    qb = q.reshape(b, nq, q_block, hkv, g, d).transpose(1, 0, 3, 4, 2, 5)
+    kb = k.reshape(b, nk, kv_block, hkv, d).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(b, nk, kv_block, hkv, dv).transpose(1, 0, 3, 2, 4)
+    # pin the kv-head dim to the model axis: GSPMD otherwise settles on
+    # replicated attention inside the tile scans (§Perf A1)
+    from repro.distributed import maybe_constrain
+    qb = maybe_constrain(qb, (None, "data", "model", None, None, None))
+    kb = maybe_constrain(kb, (None, "data", "model", None, None))
+    vb = maybe_constrain(vb, (None, "data", "model", None, None))
+
+    kpos = q_offset * 0 + jnp.arange(skv).reshape(nk, kv_block)
+
+    def q_tile(_, qi):
+        qt, qidx = qi                                # (b,hkv,g,qblk,d)
+        qposs = q_offset + qidx * q_block + jnp.arange(q_block)
+
+        def kv_tile(carry, ki):
+            m, l, acc = carry
+            kt, vt, kposs = ki
+            if f32_inputs:
+                s = jnp.einsum("bhgqd,bhkd->bhgqk", qt.astype(jnp.float32),
+                               kt.astype(jnp.float32)) * scale
+            else:
+                s = jnp.einsum("bhgqd,bhkd->bhgqk", qt, kt,
+                               preferred_element_type=jnp.float32) * scale
+            if causal:
+                msk = qposs[:, None] >= kposs[None, :]
+                s = jnp.where(msk[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(vt.dtype), vt).astype(jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, hkv, g, q_block), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_block, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_tile, (m0, l0, a0),
+                                      (kb, vb, kpos))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, ob = jax.lax.scan(q_tile, None, (qb, jnp.arange(nq)))
+    # ob: (nq, b, hkv, g, q_block, dv) -> (b, sq, hq, dv)
+    return ob.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, hq, dv)
+
+
+def tile_kv(q, k, v):
+    """GQA -> MHA by tiling KV heads g times ([kv0,kv1,kv0,kv1,...]).
+
+    Under GSPMD the (hkv, g) grouped reshape of the q head dim is not an
+    expressible sharding when hkv < mesh_model, which silently replicates the
+    whole attention computation across the model axis (measured 16x on the
+    dry-run — EXPERIMENTS.md §Perf iteration 1). Tiling KV keeps the q head
+    dim intact so it shards; the tile itself is a broadcast over the g factor
+    (outer, contiguous), which GSPMD propagates cleanly. The q head
+    convention becomes h = g_idx * hkv + kv_idx (weights are initialised in
+    whatever convention the model uses — this is a layout choice)."""
+    g = q.shape[2] // k.shape[2]
+    if g > 1:
+        k = jnp.tile(k, (1, 1, g, 1))
+        v = jnp.tile(v, (1, 1, g, 1))
+    return k, v
+
+
+def attention(q, k, v, *, causal: bool, use_pallas: bool = False,
+              q_offset: int = 0, kv_len=None, window: int = 0,
+              q_block: int = 1024, kv_block: int = 1024,
+              scale: Optional[float] = None, gqa_mode: str = "grouped",
+              f32_inputs: bool = True):
+    """Dispatch: Pallas kernel on TPU, blocked XLA otherwise; simple path for
+    tiny/decode shapes and masked variants the blocked path doesn't cover."""
+    if gqa_mode == "tiled":
+        k, v = tile_kv(q, k, v)
+    sq, skv = q.shape[1], k.shape[1]
+    if use_pallas and sq > 1 and kv_len is None and window == 0:
+        from repro.kernels.flash_attention import ops as fa
+        return fa.flash_attention(q, k, v, causal=causal, scale=scale)
+    if sq == 1 or kv_len is not None or window or sq < 2 * q_block or skv < 2 * kv_block:
+        return simple_attention(q, k, v, causal=causal, kv_len=kv_len,
+                                q_offset=q_offset, window=window, scale=scale,
+                                f32_inputs=f32_inputs)
+    return blocked_attention(q, k, v, causal=causal, q_offset=q_offset,
+                             q_block=q_block, kv_block=kv_block, scale=scale,
+                             f32_inputs=f32_inputs)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    if act == "gelu_mlp":
+        return {"w_up": _init(ks[0], (d_model, d_ff), dtype=dtype),
+                "w_down": _init(ks[1], (d_ff, d_model), dtype=dtype)}
+    return {"w_gate": _init(ks[0], (d_model, d_ff), dtype=dtype),
+            "w_up": _init(ks[1], (d_model, d_ff), dtype=dtype),
+            "w_down": _init(ks[2], (d_ff, d_model), dtype=dtype)}
+
+
+def apply_mlp(params, x, act: str):
+    if act == "gelu_mlp":
+        h = jax.nn.gelu(x @ params["w_up"])
+        return h @ params["w_down"]
+    fn = jax.nn.gelu if act == "gelu" else jax.nn.silu
+    h = fn(x @ params["w_gate"]) * (x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+def cross_entropy_loss(logits, labels, mask=None):
+    """logits (..., V) f32; labels int; mask optional {0,1}."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

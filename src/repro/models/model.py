@@ -1,0 +1,53 @@
+"""Unified model API: ``build(cfg)`` returns a Model namespace whose members
+close over the config. All ten assigned architectures flow through here.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, hybrid, transformer
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init_params: Callable[[jax.Array], Dict]
+    forward: Callable[..., Any]
+    loss: Callable[..., Any]
+    init_decode_state: Callable[[int, int], Dict]
+    decode_step: Callable[..., Any]
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.is_encoder_decoder:
+        mod = encdec
+    elif cfg.family == "hybrid":
+        mod = hybrid
+    else:
+        mod = transformer
+
+    return Model(
+        cfg=cfg,
+        init_params=lambda rng: mod.init_params(rng, cfg),
+        forward=lambda params, batch: mod.forward(params, batch, cfg),
+        loss=lambda params, batch: mod.loss(params, batch, cfg),
+        init_decode_state=lambda batch, max_len: mod.init_decode_state(
+            cfg, batch, max_len),
+        decode_step=lambda params, state, token, cache_len: mod.decode_step(
+            params, state, token, cache_len, cfg),
+    )
+
+
+def abstract_params(cfg: ModelConfig) -> Dict:
+    """Param ShapeDtypeStructs without allocation (dry-run)."""
+    model = build(cfg)
+    return jax.eval_shape(model.init_params, jax.ShapeDtypeStruct((2,), "uint32"))
+
+
+def abstract_decode_state(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    model = build(cfg)
+    return jax.eval_shape(lambda: model.init_decode_state(batch, max_len))

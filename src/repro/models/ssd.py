@@ -1,0 +1,188 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060).
+
+The chunked SSD formulation re-expresses the selective-scan as dense
+intra-chunk matmuls (MXU-friendly) plus a cheap inter-chunk state
+recurrence — this is the TPU adaptation of the paper's GPU kernel: the
+warp-parallel scan becomes (L x L) block matmuls on the systolic array.
+
+``ssd_chunked`` is the jnp reference used by the model forward (and mirrored
+by the Pallas kernel in repro.kernels.ssd). ``ssd_decode_step`` is the O(1)
+recurrent update used at decode.
+
+Shapes: x (b,s,h,p); dt (b,s,h) [post-softplus]; A (h,) [negative];
+B, C (b,s,g,n) with h % g == 0. State: (b, g, h/g, n, p).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.layers import _init, rms_norm
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int,
+                initial_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (b,s,h,p), final_state (b,g,hg,n,p))."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hg = h // g
+    L = min(chunk, s)
+    if s % L:
+        raise ValueError(f"seq {s} not divisible by chunk {L}")
+    nc = s // L
+
+    xc = x.reshape(b, nc, L, g, hg, p)
+    dtc = dt.reshape(b, nc, L, g, hg).astype(jnp.float32)
+    Bc = B.reshape(b, nc, L, g, n)
+    Cc = C.reshape(b, nc, L, g, n)
+
+    dA = dtc * A.reshape(g, hg).astype(jnp.float32)        # (b,nc,L,g,hg), <=0
+    cum = jnp.cumsum(dA, axis=2)                           # inclusive
+
+    # ---- intra-chunk (dense, causal) ----
+    cb = jnp.einsum("bclgn,bcmgn->bclmg", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))
+    seg = cum[:, :, :, None] - cum[:, :, None, :]          # (b,nc,L,L,g,hg)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.exp(jnp.where(causal[None, None, :, :, None, None], seg, -1e30))
+    m = cb[:, :, :, :, :, None] * decay * dtc[:, :, None]  # M[l,m]
+    y_diag = jnp.einsum("bclmgk,bcmgkp->bclgkp", m.astype(x.dtype), xc)
+
+    # ---- chunk states ----
+    rdecay = jnp.exp(cum[:, :, -1:] - cum)                 # (b,nc,L,g,hg)
+    S = jnp.einsum("bclgn,bclgk,bclgkp->bcgknp", Bc.astype(jnp.float32),
+                   (rdecay * dtc).astype(x.dtype).astype(jnp.float32),
+                   xc.astype(jnp.float32))
+    chunk_decay = jnp.exp(cum[:, :, -1])                   # (b,nc,g,hg)
+
+    def step(hprev, inp):
+        s_c, dec_c = inp
+        hnew = hprev * dec_c[..., None, None] + s_c
+        return hnew, hprev
+
+    h0 = (initial_state.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((b, g, hg, n, p), jnp.float32))
+    hlast, hprevs = jax.lax.scan(
+        step, h0, (S.transpose(1, 0, 2, 3, 4, 5),
+                   chunk_decay.transpose(1, 0, 2, 3)))
+
+    # ---- inter-chunk contribution ----
+    y_off = jnp.einsum("bclgn,cbgknp->bclgkp", Cc.astype(jnp.float32),
+                       hprevs) * jnp.exp(cum)[..., None]
+    y = (y_diag.astype(jnp.float32) + y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype), hlast
+
+
+def ssd_decode_step(x, dt, A, B, C, state):
+    """One recurrent step. x (b,h,p); dt (b,h); B,C (b,g,n);
+    state (b,g,hg,n,p) f32. Returns (y (b,h,p), new_state)."""
+    b, h, p = x.shape
+    g, n = B.shape[1], B.shape[2]
+    hg = h // g
+    xg = x.reshape(b, g, hg, p)
+    dtg = dt.reshape(b, g, hg).astype(jnp.float32)
+    dec = jnp.exp(dtg * A.reshape(g, hg).astype(jnp.float32))
+    upd = jnp.einsum("bgn,bgk,bgkp->bgknp", B.astype(jnp.float32),
+                     dtg, xg.astype(jnp.float32))
+    state = state * dec[..., None, None] + upd
+    y = jnp.einsum("bgn,bgknp->bgkp", C.astype(jnp.float32), state)
+    return y.reshape(b, h, p).astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba-2 block: in_proj -> causal depthwise conv -> SSD -> gated norm
+# ---------------------------------------------------------------------------
+
+def _dims(cfg: ModelConfig):
+    m: SSMConfig = cfg.ssm
+    d_in = m.expand * cfg.d_model
+    h = d_in // m.head_dim
+    conv_dim = d_in + 2 * m.n_groups * m.d_state
+    return m, d_in, h, conv_dim
+
+
+def init_mamba(key, cfg: ModelConfig, dtype=jnp.float32):
+    m, d_in, h, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    in_dim = 2 * d_in + 2 * m.n_groups * m.d_state + h
+    return {
+        "in_proj": _init(ks[0], (cfg.d_model, in_dim), dtype=dtype),
+        "conv_w": _init(ks[1], (m.conv_kernel, conv_dim), scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(dtype),
+        "D": jnp.ones((h,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.linspace(1e-3, 1e-1, h))).astype(dtype),  # inv-softplus
+        "norm": jnp.zeros((d_in,), dtype),
+        "out_proj": _init(ks[2], (d_in, cfg.d_model), dtype=dtype),
+    }
+
+
+def causal_conv(x, w, b):
+    """Depthwise causal conv. x (b,s,c); w (K,c)."""
+    c = x.shape[-1]
+    out = jax.lax.conv_general_dilated(
+        x, w[:, None, :].astype(x.dtype), window_strides=(1,),
+        padding=[(w.shape[0] - 1, 0)],
+        dimension_numbers=("NHC", "HIO", "NHC"), feature_group_count=c)
+    return out + b.astype(x.dtype)
+
+
+def _split_proj(params, xt, cfg: ModelConfig):
+    m, d_in, h, conv_dim = _dims(cfg)
+    proj = xt @ params["in_proj"]
+    z, xbc, dt = jnp.split(proj, [d_in, d_in + conv_dim], axis=-1)
+    return z, xbc, dt, (m, d_in, h, conv_dim)
+
+
+def mamba_full(params, xt, cfg: ModelConfig, initial=None):
+    """xt (b,s,d) -> (y (b,s,d), (conv_state, ssm_state))."""
+    b, s, _ = xt.shape
+    z, xbc, dt, (m, d_in, h, conv_dim) = _split_proj(params, xt, cfg)
+    # conv state for decode handoff: last K-1 *pre-conv* inputs
+    k = m.conv_kernel
+    conv_state = xbc[:, -(k - 1):] if s >= k - 1 else jnp.pad(
+        xbc, ((0, 0), (k - 1 - s, 0), (0, 0)))
+    xbc = jax.nn.silu(causal_conv(xbc, params["conv_w"], params["conv_b"]))
+    x, B, C = jnp.split(xbc, [d_in, d_in + m.n_groups * m.d_state], axis=-1)
+    x = x.reshape(b, s, h, m.head_dim)
+    B = B.reshape(b, s, m.n_groups, m.d_state)
+    C = C.reshape(b, s, m.n_groups, m.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, ssm_state = ssd_chunked(x, dt, A, B, C, m.chunk, initial)
+    y = y + x * params["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(b, s, d_in)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    return out, (conv_state, ssm_state)
+
+
+def mamba_decode(params, xt, state, cfg: ModelConfig):
+    """xt (b,1,d); state = (conv_state (b,K-1,conv_dim), ssm_state)."""
+    conv_state, ssm_state = state
+    b = xt.shape[0]
+    z, xbc, dt, (m, d_in, h, conv_dim) = _split_proj(params, xt, cfg)
+    window = jnp.concatenate([conv_state, xbc.astype(conv_state.dtype)], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", window,
+                          params["conv_w"].astype(window.dtype))
+    conv_out = conv_out + params["conv_b"].astype(window.dtype)
+    xbc1 = jax.nn.silu(conv_out)
+    new_conv_state = window[:, 1:]
+    x, B, C = jnp.split(xbc1, [d_in, d_in + m.n_groups * m.d_state], axis=-1)
+    x = x.reshape(b, h, m.head_dim)
+    B = B.reshape(b, m.n_groups, m.d_state)
+    C = C.reshape(b, m.n_groups, m.d_state)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, ssm_state = ssd_decode_step(x, dt, A, B, C, ssm_state)
+    y = y + x * params["D"].astype(x.dtype)[None, :, None]
+    y = y.reshape(b, 1, d_in)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    return y @ params["out_proj"], (new_conv_state, ssm_state)

@@ -1,0 +1,335 @@
+"""Decoder-only LM assembly for dense / MoE / MLA / SSM / VLM families.
+
+Layers are *scanned* (params stacked on a leading axis) so the HLO contains a
+single traced layer regardless of depth — essential for 95-layer dry-run
+compiles. Heterogeneous leading layers (deepseek-v2-lite's dense layer 0) are
+kept unstacked.
+
+API (functions returned by ``repro.models.model.build``):
+  init_params(rng)                                  -> params
+  forward(params, batch)                            -> logits over text posns
+  loss(params, batch)                               -> (scalar, metrics)
+  init_decode_state(batch, max_len)                 -> state pytree
+  prefill(params, batch, state)                     -> (logits_last, state)
+  decode_step(params, state, token, cache_len)      -> (logits, state)
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssd as ssd_mod
+from repro.models.layers import (_init, apply_mlp, cast_floats,
+                                 cross_entropy_loss, init_mlp, rms_norm)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_attn(key, cfg: ModelConfig, dtype):
+    if cfg.mla is not None:
+        return attn_mod.init_mla(key, cfg, dtype)
+    return attn_mod.init_gqa(key, cfg, dtype)
+
+
+def _init_layer(key, cfg: ModelConfig, *, dense_ff: int = 0, dtype=jnp.float32):
+    """One transformer layer; dense_ff>0 forces a dense MLP of that width."""
+    k1, k2 = jax.random.split(key)
+    p = {
+        "attn_norm": jnp.zeros((cfg.d_model,), dtype),
+        "mlp_norm": jnp.zeros((cfg.d_model,), dtype),
+        "attn": _init_attn(k1, cfg, dtype),
+    }
+    if cfg.family == "ssm":
+        raise AssertionError("ssm handled by init_mamba stack")
+    if dense_ff or cfg.moe is None:
+        p["mlp"] = init_mlp(k2, cfg.d_model, dense_ff or cfg.d_ff, cfg.act, dtype)
+    else:
+        p["moe"] = moe_mod.init_moe(k2, cfg, dtype)
+    return p
+
+
+def init_params(rng, cfg: ModelConfig) -> Dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(rng, 8)
+    p: Dict = {
+        "embed": _init(keys[0], (cfg.vocab_size, cfg.d_model), scale=0.02,
+                       dtype=dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = _init(keys[1], (cfg.d_model, cfg.vocab_size),
+                             dtype=dtype)
+    if cfg.family == "ssm":
+        n = cfg.n_layers
+        lkeys = jax.random.split(keys[2], n)
+        layer = jax.vmap(lambda k: {
+            "norm": jnp.zeros((cfg.d_model,), dtype),
+            "mamba": ssd_mod.init_mamba(k, cfg, dtype)})
+        p["layers"] = layer(lkeys)
+        return p
+    n_scan = cfg.n_layers - cfg.first_dense_layers
+    lkeys = jax.random.split(keys[2], n_scan)
+    p["layers"] = jax.vmap(
+        lambda k: _init_layer(k, cfg, dtype=dtype))(lkeys)
+    if cfg.first_dense_layers:
+        assert cfg.first_dense_layers == 1
+        p["dense0"] = _init_layer(keys[3], cfg,
+                                  dense_ff=cfg.first_dense_d_ff, dtype=dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill, full sequence)
+# ---------------------------------------------------------------------------
+
+def _attn_full(lp, x, cfg, return_kv=False):
+    h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    if cfg.mla is not None:
+        return attn_mod.mla_full(lp["attn"], h, cfg, return_kv=return_kv)
+    return attn_mod.gqa_full(lp["attn"], h, cfg, return_kv=return_kv)
+
+
+def _mlp_or_moe(lp, x, cfg):
+    h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    if "moe" in lp:
+        out, aux, z = moe_mod.apply_moe(lp["moe"], h, cfg)
+    else:
+        out, aux, z = apply_mlp(lp["mlp"], h, cfg.act), 0.0, 0.0
+    return out, aux, z
+
+
+def remat_wrap(body, cfg):
+    """Per-layer remat with a selectable policy: "full" recomputes the whole
+    layer in backward; "dots" saves matmul outputs (no MXU recompute) at the
+    price of activation memory — §Perf iteration knob."""
+    if not cfg.remat:
+        return body
+    policy = (None if cfg.remat_policy == "full"
+              else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(body, policy=policy)
+
+
+def _layer_full(x, lp, cfg, return_kv=False):
+    if return_kv:
+        a, kv = _attn_full(lp, x, cfg, return_kv=True)
+    else:
+        a, kv = _attn_full(lp, x, cfg), None
+    x = x + a
+    m, aux, z = _mlp_or_moe(lp, x, cfg)
+    x = x + m
+    return x, (jnp.asarray(aux, jnp.float32), jnp.asarray(z, jnp.float32)), kv
+
+
+def _embed(params, tokens, cfg):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    if cfg.tie_embeddings:  # gemma scales tied embeddings
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def _unembed(params, h, cfg):
+    w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return h.astype(jnp.float32) @ w.astype(jnp.float32)
+
+
+def _assemble_input(params, batch, cfg):
+    x = _embed(params, batch["tokens"], cfg)
+    if cfg.family == "vlm":
+        patch = batch["patch_embeds"].astype(x.dtype)
+        x = jnp.concatenate([patch, x], axis=1)
+    return x
+
+
+def forward(params, batch, cfg: ModelConfig):
+    """-> (logits over text positions (b, s_text, V) f32, aux_metrics)."""
+    params = cast_floats(params, cfg.compute_dtype)
+    x = _assemble_input(params, batch, cfg)
+
+    if cfg.family == "ssm":
+        def body(h, lp):
+            y, _ = ssd_mod.mamba_full(
+                lp["mamba"], rms_norm(h, lp["norm"], cfg.norm_eps), cfg)
+            return h + y, None
+        body = remat_wrap(body, cfg)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        aux = (jnp.float32(0.0), jnp.float32(0.0))
+    else:
+        if cfg.first_dense_layers:
+            x, _, _ = _layer_full(x, params["dense0"], cfg)
+
+        def body(h, lp):
+            h, aux, _ = _layer_full(h, lp, cfg)
+            return h, aux
+        body = remat_wrap(body, cfg)
+        x, auxs = jax.lax.scan(body, x, params["layers"])
+        aux = (jnp.sum(auxs[0]), jnp.sum(auxs[1]))
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.family == "vlm":
+        x = x[:, cfg.n_image_tokens:]
+    logits = _unembed(params, x, cfg)
+    return logits, {"moe_aux": aux[0], "moe_z": aux[1]}
+
+
+def loss(params, batch, cfg: ModelConfig):
+    logits, metrics = forward(params, batch, cfg)
+    ce = cross_entropy_loss(logits, batch["labels"])
+    total = ce + 0.01 * metrics["moe_aux"] + 1e-3 * metrics["moe_z"]
+    metrics = dict(metrics, ce=ce)
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    ct = jnp.dtype(cfg.kv_cache_dtype or cfg.compute_dtype)
+    n_scan = cfg.n_layers - cfg.first_dense_layers
+    st: Dict = {}
+    if cfg.family == "ssm":
+        m = cfg.ssm
+        d_in = m.expand * cfg.d_model
+        h = d_in // m.head_dim
+        conv_dim = d_in + 2 * m.n_groups * m.d_state
+        st["conv"] = jnp.zeros(
+            (cfg.n_layers, batch, m.conv_kernel - 1, conv_dim), ct)
+        st["ssm"] = jnp.zeros(
+            (cfg.n_layers, batch, m.n_groups, h // m.n_groups, m.d_state,
+             m.head_dim), jnp.float32)
+        return st
+    if cfg.mla is not None:
+        r, rd = cfg.mla.kv_lora_rank, cfg.mla.qk_rope_head_dim
+        st["ckv"] = jnp.zeros((n_scan, batch, max_len, r), ct)
+        st["krope"] = jnp.zeros((n_scan, batch, max_len, rd), ct)
+        if cfg.first_dense_layers:
+            st["ckv0"] = jnp.zeros((batch, max_len, r), ct)
+            st["krope0"] = jnp.zeros((batch, max_len, rd), ct)
+        return st
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    st["k"] = jnp.zeros((n_scan, batch, max_len, hkv, hd), ct)
+    st["v"] = jnp.zeros((n_scan, batch, max_len, hkv, hd), ct)
+    return st
+
+
+def _layer_decode(lp, x, ks, cache_len, cfg):
+    h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    if cfg.mla is not None:
+        a, (ckv, krope) = attn_mod.mla_decode(
+            lp["attn"], h, ks[0], ks[1], cache_len, cfg)
+        new_ks = (ckv, krope)
+    else:
+        a, (ck, cv) = attn_mod.gqa_decode(
+            lp["attn"], h, ks[0], ks[1], cache_len, cfg)
+        new_ks = (ck, cv)
+    x = x + a
+    m, _, _ = _mlp_or_moe(lp, x, cfg)
+    return x + m, new_ks
+
+
+def decode_step(params, state: Dict, token, cache_len, cfg: ModelConfig):
+    """token (b, 1) -> (logits (b, 1, V) f32, new state)."""
+    params = cast_floats(params, cfg.compute_dtype)
+    x = _embed(params, token, cfg)
+
+    if cfg.family == "ssm":
+        def body(h, xs):
+            lp, conv, ssm = xs
+            y, (conv, ssm) = ssd_mod.mamba_decode(
+                lp["mamba"], rms_norm(h, lp["norm"], cfg.norm_eps),
+                (conv, ssm), cfg)
+            return h + y, (conv, ssm)
+        x, (conv, ssm) = jax.lax.scan(
+            body, x, (params["layers"], state["conv"], state["ssm"]))
+        state = dict(state, conv=conv, ssm=ssm)
+    elif cfg.mla is not None:
+        if cfg.first_dense_layers:
+            x, (ckv0, krope0) = _layer_decode(
+                params["dense0"], x, (state["ckv0"], state["krope0"]),
+                cache_len, cfg)
+            state = dict(state, ckv0=ckv0, krope0=krope0)
+
+        def body(h, xs):
+            lp, ckv, krope = xs
+            h, (ckv, krope) = _layer_decode(lp, h, (ckv, krope), cache_len, cfg)
+            return h, (ckv, krope)
+        x, (ckv, krope) = jax.lax.scan(
+            body, x, (params["layers"], state["ckv"], state["krope"]))
+        state = dict(state, ckv=ckv, krope=krope)
+    else:
+        def body(h, xs):
+            lp, ck, cv = xs
+            h, (ck, cv) = _layer_decode(lp, h, (ck, cv), cache_len, cfg)
+            return h, (ck, cv)
+        x, (k, v) = jax.lax.scan(
+            body, x, (params["layers"], state["k"], state["v"]))
+        state = dict(state, k=k, v=v)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _unembed(params, x, cfg), state
+
+
+def prefill(params, batch, cfg: ModelConfig, state: Optional[Dict] = None,
+            max_len: Optional[int] = None):
+    """Full-sequence prefill; returns (last-position logits, filled state).
+
+    For the dry-run prefill shape we only need logits; state fill-in is used
+    by the serving engine (repro.serving.engine) for prefill->decode handoff.
+    """
+    if state is None:
+        logits, _ = forward(params, batch, cfg)
+        return logits[:, -1:], None
+    # serving path: run layers individually collecting KV — implemented via
+    # the same scan but returning per-layer kv stacks.
+    params = cast_floats(params, cfg.compute_dtype)
+    x = _assemble_input(params, batch, cfg)
+    if cfg.family == "ssm":
+        def body(h, xs):
+            lp, conv, ssm = xs
+            y, (cs, ss) = ssd_mod.mamba_full(
+                lp["mamba"], rms_norm(h, lp["norm"], cfg.norm_eps), cfg)
+            return h + y, (cs, ss)
+        x, (conv, ssm) = jax.lax.scan(
+            body, x, (params["layers"], state["conv"], state["ssm"]))
+        state = dict(state, conv=conv, ssm=ssm)
+    else:
+        s = x.shape[1]
+        if cfg.first_dense_layers:
+            x, _, kv0 = _layer_full(x, params["dense0"], cfg, return_kv=True)
+            if cfg.mla is not None:
+                state = dict(state,
+                             ckv0=_fill(state["ckv0"], kv0[0]),
+                             krope0=_fill(state["krope0"], kv0[1]))
+
+        def body(h, lp):
+            h, _, kv = _layer_full(h, lp, cfg, return_kv=True)
+            return h, kv
+        x, kvs = jax.lax.scan(body, x, params["layers"])
+        if cfg.mla is not None:
+            state = dict(state, ckv=_fill(state["ckv"], kvs[0], stacked=True),
+                         krope=_fill(state["krope"], kvs[1], stacked=True))
+        else:
+            state = dict(state, k=_fill(state["k"], kvs[0], stacked=True),
+                         v=_fill(state["v"], kvs[1], stacked=True))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.family == "vlm":
+        x = x[:, -1:]
+        logits = _unembed(params, x, cfg)
+    else:
+        logits = _unembed(params, x[:, -1:], cfg)
+    return logits, state
+
+
+def _fill(cache, new, stacked=False):
+    """Write prefill K/V into position 0.. of a max_len cache."""
+    axis = 2 if stacked else 1
+    new = new.astype(cache.dtype)
+    idx = [0] * cache.ndim
+    return jax.lax.dynamic_update_slice(cache, new, tuple(idx))

@@ -1,0 +1,4 @@
+from repro.serving.backend import EngineBackend, byte_tokenize
+from repro.serving.engine import InferenceEngine, Request
+
+__all__ = ["EngineBackend", "byte_tokenize", "InferenceEngine", "Request"]

@@ -1,0 +1,49 @@
+"""JAX engine adapter for the AgentRM middleware: turns (context, prompt)
+text into token streams through the InferenceEngine, emitting heartbeats per
+decode step so the zombie reaper can watch real liveness.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable
+
+import numpy as np
+
+from repro.core.middleware import ModelBackend, ZombieKilled
+from repro.serving.engine import InferenceEngine
+
+
+def byte_tokenize(text: str, vocab: int, max_len: int = 96) -> np.ndarray:
+    toks = np.frombuffer(text.encode("utf-8", "ignore"), dtype=np.uint8)
+    return (toks[:max_len].astype(np.int32) % max(vocab - 2, 2)) + 1
+
+
+class EngineBackend(ModelBackend):
+    """Serialises middleware turns through a shared engine instance. One
+    decode step per heartbeat: a stall in XLA shows up as heartbeat silence,
+    which is exactly what the reaper watches."""
+
+    def __init__(self, engine: InferenceEngine, max_new_tokens: int = 12):
+        self.engine = engine
+        self.max_new_tokens = max_new_tokens
+        self._lock = threading.Lock()
+
+    def generate(self, agent_id: str, context: str, prompt: str,
+                 heartbeat: Callable[[], None],
+                 cancelled: threading.Event) -> str:
+        toks = byte_tokenize(context[-256:] + "\n" + prompt,
+                             self.engine.cfg.vocab_size)
+        with self._lock:
+            rid = self.engine.submit(toks, max_new_tokens=self.max_new_tokens)
+            out = None
+            for _ in range(self.max_new_tokens + 4):
+                if cancelled.is_set():
+                    raise ZombieKilled(f"turn for {agent_id} reaped mid-decode")
+                heartbeat()
+                for fin in self.engine.step():
+                    if fin.rid == rid:
+                        out = fin
+                if out is not None:
+                    break
+        assert out is not None, "engine failed to finish request"
+        return "tok:" + ",".join(str(t) for t in out.out_tokens)

@@ -1,0 +1,144 @@
+"""Continuous-batching inference engine (the "model API" under AgentRM).
+
+Slot-based: a fixed decode batch of `max_slots` sequences advances one token
+per `step()`; prefill fills an empty slot and scatters its KV into the
+batched cache (iteration-level scheduling, Orca-style). Lanes in the
+middleware map 1:1 onto slots here.
+
+Per-arch session state (KV pages vs SSM states) is produced by the model's
+``init_decode_state`` — hibernation of a single slot extracts that slot's
+slice (``extract_slot`` / ``restore_slot``), which is what backs CLM
+hibernation at engine level.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import build
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (S,) int32
+    max_new_tokens: int = 16
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    slot: Optional[int] = None
+    done: bool = False
+
+
+class InferenceEngine:
+    """Greedy-decode engine for the decoder-only GQA family (the engine the
+    serve examples use; MLA/SSM archs serve via lockstep decode)."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 4,
+                 max_len: int = 256):
+        assert cfg.family in ("dense", "moe", "vlm"), \
+            "continuous batching engine targets the decoder-only GQA family"
+        self.cfg = cfg
+        self.model = build(cfg)
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.state = self.model.init_decode_state(max_slots, max_len)
+        self.lens = jnp.zeros((max_slots,), jnp.int32)
+        self.active: Dict[int, Request] = {}
+        self.free_slots = list(range(max_slots))
+        self._next_rid = 0
+        self._queue: List[Request] = []
+        self._last_tok = jnp.zeros((max_slots, 1), jnp.int32)
+
+        # jit'd single-sequence prefill returning per-layer kv
+        self._prefill = jax.jit(self._prefill_impl)
+        self._decode = jax.jit(self.model.decode_step)
+
+    # ---------------------------------------------------------- prefill
+    def _prefill_impl(self, params, tokens):
+        """tokens: (1, S) -> (last_logits, kv stacks (L, 1, S, hkv, hd))."""
+        from repro.models import transformer as tr
+        cfg = self.cfg
+        state = self.model.init_decode_state(1, tokens.shape[1])
+        logits, state = tr.prefill(params, {"tokens": tokens}, cfg,
+                                   state=state, max_len=tokens.shape[1])
+        return logits, state
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(Request(rid, np.asarray(prompt, np.int32),
+                                   max_new_tokens=max_new_tokens))
+        return rid
+
+    def _admit(self):
+        while self._queue and self.free_slots:
+            req = self._queue.pop(0)
+            slot = self.free_slots.pop(0)
+            req.slot = slot
+            plen = len(req.prompt)
+            logits, pstate = self._prefill(
+                self.params, jnp.asarray(req.prompt)[None, :plen])
+            # scatter prefill KV into the batched cache at this slot
+            def put(cache, pre):
+                # cache: (L, B, S, ...); pre: (L, 1, plen, ...)
+                return jax.lax.dynamic_update_slice(
+                    cache, pre.astype(cache.dtype),
+                    (0, slot) + (0,) * (cache.ndim - 2))
+            self.state = jax.tree_util.tree_map(put, self.state, pstate)
+            self.lens = self.lens.at[slot].set(plen)
+            tok = int(jnp.argmax(logits[0, -1]))
+            req.out_tokens.append(tok)
+            self._last_tok = self._last_tok.at[slot, 0].set(tok)
+            self.active[req.rid] = req
+
+    # ------------------------------------------------------------ step
+    def step(self) -> List[Request]:
+        """Advance every active slot one token; returns finished requests."""
+        self._admit()
+        if not self.active:
+            return []
+        logits, self.state = self._decode(
+            self.params, self.state, self._last_tok, self.lens)
+        self.lens = jnp.where(
+            jnp.isin(jnp.arange(self.max_slots),
+                     jnp.array([r.slot for r in self.active.values()])),
+            self.lens + 1, self.lens)
+        toks = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        finished = []
+        for rid, req in list(self.active.items()):
+            tok = int(toks[req.slot])
+            req.out_tokens.append(tok)
+            self._last_tok = self._last_tok.at[req.slot, 0].set(tok)
+            if (len(req.out_tokens) >= req.max_new_tokens
+                    or int(self.lens[req.slot]) >= self.max_len - 1):
+                req.done = True
+                finished.append(req)
+                self.free_slots.append(req.slot)
+                del self.active[rid]
+        return finished
+
+    def run_to_completion(self, max_steps: int = 512) -> List[Request]:
+        done: List[Request] = []
+        for _ in range(max_steps):
+            done += self.step()
+            if not self.active and not self._queue:
+                break
+        return done
+
+    # ------------------------------------------------------ hibernation
+    def extract_slot(self, slot: int):
+        """Session state slice for one slot (engine-level hibernation)."""
+        return jax.tree_util.tree_map(
+            lambda c: np.asarray(c[:, slot]), self.state), int(self.lens[slot])
+
+    def restore_slot(self, slot: int, payload, length: int):
+        snap, = (payload,)
+        def put(cache, s):
+            return cache.at[:, slot].set(jnp.asarray(s, cache.dtype))
+        self.state = jax.tree_util.tree_map(put, self.state, snap)
+        self.lens = self.lens.at[slot].set(length)

@@ -1,0 +1,37 @@
+"""The jit-able training step: loss -> grads -> clip -> AdamW."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models import build
+from repro.training import optimizer as opt
+
+
+def make_train_step(cfg: ModelConfig, ocfg: opt.AdamWConfig = opt.AdamWConfig()):
+    model = build(cfg)
+
+    def train_step(params, state: opt.AdamWState, batch: Dict[str, jax.Array]
+                   ) -> Tuple[Any, opt.AdamWState, Dict[str, jax.Array]]:
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(params, batch)
+        params, state, om = opt.update(grads, state, params, ocfg)
+        return params, state, dict(metrics, loss=loss, **om)
+
+    return train_step
+
+
+def make_serve_steps(cfg: ModelConfig):
+    """(prefill_logits, decode_step) pair for the serving shapes."""
+    model = build(cfg)
+
+    def prefill_step(params, batch):
+        logits, _ = model.forward(params, batch)
+        return logits[:, -1:]
+
+    def decode_step(params, state, token, cache_len):
+        return model.decode_step(params, state, token, cache_len)
+
+    return prefill_step, decode_step

@@ -1,0 +1,122 @@
+"""Hypothesis property tests on system invariants."""
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.context import (ContextLifecycleManager, Message, Summarizer,
+                                count_tokens)
+from repro.core.scheduler import (QueueClass, SimConfig, Simulator, Turn,
+                                  TokenBucket, make_policy)
+
+turns_strategy = st.lists(
+    st.tuples(
+        st.floats(0.0, 100.0),                 # arrival
+        st.floats(0.5, 10.0),                  # service
+        st.sampled_from(list(QueueClass)),
+        st.booleans(),                         # hangs
+    ), min_size=1, max_size=40)
+
+
+def _build(spec):
+    return [Turn(agent_id=f"a{i % 3}", arrival=a, service=s, queue_class=qc,
+                 hangs=h, hang_duration=45.0)
+            for i, (a, s, qc, h) in enumerate(spec)]
+
+
+@settings(max_examples=25, deadline=None)
+@given(turns_strategy, st.sampled_from(["fifo", "rr", "pq", "mlfq"]),
+       st.integers(1, 4))
+def test_scheduler_conserves_turns(spec, policy, lanes):
+    """Every turn ends DONE or FAILED; none lost; lanes never oversubscribed
+    or leaked."""
+    sim = Simulator(make_policy(policy),
+                    SimConfig(lanes=lanes, use_reaper=(policy == "mlfq"),
+                              use_admission=False, seed=1))
+    turns = _build(spec)
+    for t in turns:
+        sim.add_turn(t)
+    m = sim.run()
+    assert m.completed + m.failed == len(turns)
+    assert sim.free_lanes == lanes              # all lanes returned
+    assert not sim.running
+    for t in turns:
+        if t.end is not None and t.start is not None:
+            assert t.end >= t.start >= t.arrival
+
+
+@settings(max_examples=25, deadline=None)
+@given(turns_strategy)
+def test_mlfq_never_worse_on_zombies(spec):
+    turns_a = _build(spec)
+    turns_b = _build(spec)
+    fifo = Simulator(make_policy("fifo"), SimConfig(lanes=2, seed=0))
+    mlfq = Simulator(make_policy("mlfq"),
+                     SimConfig(lanes=2, use_reaper=True, seed=0))
+    for t in turns_a:
+        fifo.add_turn(t)
+    for t in turns_b:
+        mlfq.add_turn(t)
+    mf, mm = fifo.run(), mlfq.run()
+    assert mm.lane_waste_s <= mf.lane_waste_s + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(1.0, 1000.0), st.floats(1.0, 5000.0),
+       st.lists(st.tuples(st.floats(0, 100), st.floats(0, 500)),
+                min_size=1, max_size=50))
+def test_token_bucket_never_negative_never_over_burst(rate, burst, events):
+    tb = TokenBucket(rate=rate, burst=burst)
+    now = 0.0
+    for dt, amount in events:
+        now += dt
+        tb.try_consume(amount, now)
+        assert -1e-6 <= tb.level <= burst + 1e-6
+
+
+text_strategy = st.lists(
+    st.tuples(st.booleans(), st.integers(10, 120)), min_size=1, max_size=40)
+
+
+@settings(max_examples=20, deadline=None)
+@given(text_strategy, st.integers(500, 4000))
+def test_clm_window_bounded_and_keys_survive(spec, limit):
+    """For any message stream, the CLM window stays near its limit and every
+    key fact remains reachable (window or warm tier)."""
+    clm = ContextLifecycleManager(limit_tokens=limit,
+                                  physical_tokens=4 * limit)
+    keys = []
+    for i, (is_key, n_tok) in enumerate(spec):
+        body = " ".join(["w"] * n_tok)
+        if is_key:
+            fact = f"FACT-{i:05d}-prop"
+            m = Message(role="user", text=f"{fact}: v\n{body}", turn=i,
+                        kind="fact", is_key=True, key_fact=fact)
+            keys.append(fact)
+        else:
+            m = Message(role="user", text=body, turn=i)
+        clm.add(m)
+        assert clm.window_tokens <= limit * 1.3 + 200
+    for fact in keys:
+        assert clm.contains_fact(fact)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(5, 60), min_size=1, max_size=10),
+       st.floats(0.1, 0.9))
+def test_summarizer_respects_budget_and_is_deterministic(sizes, ratio):
+    s1 = Summarizer(ratio=ratio)
+    s2 = Summarizer(ratio=ratio)
+    msgs = [Message(role="user", text=" ".join(["tok"] * n), turn=i)
+            for i, n in enumerate(sizes)]
+    a = s1.summarize(msgs)
+    b = s2.summarize([Message(role="user", text=m.text, turn=m.turn)
+                      for m in msgs])
+    assert a.text.splitlines()[1:] == b.text.splitlines()[1:]
+    in_tokens = sum(m.tokens for m in msgs)
+    budget = max(12, int(in_tokens * ratio))
+    # the first line is always kept (never emit an empty summary), so a
+    # single line longer than the budget bounds the output instead
+    longest_line = max(len(l.split()) for m in msgs
+                       for l in m.text.splitlines() if l.strip())
+    bound = max(budget * 1.2, longest_line) + 16 + len(a.text.splitlines())
+    assert a.tokens <= bound

@@ -1,0 +1,117 @@
+"""Scheduler unit + behaviour tests (paper §IV.B / Tables I-V claims)."""
+import pytest
+
+from repro.core.scheduler import (SCENARIOS, DRFAccountant, MLFQPolicy,
+                                  QueueClass, SimConfig, Simulator, Turn,
+                                  TokenBucket, make_policy, make_turns,
+                                  run_policy)
+
+
+def _mk(agent="a", arrival=0.0, service=2.0, qc=QueueClass.INTERACTIVE,
+        hangs=False, hang_dur=80.0):
+    return Turn(agent_id=agent, arrival=arrival, service=service,
+                queue_class=qc, hangs=hangs, hang_duration=hang_dur)
+
+
+def test_fifo_order_preserved():
+    sim = Simulator(make_policy("fifo"), SimConfig(lanes=1))
+    ts = [_mk(arrival=i * 0.1, service=1.0) for i in range(5)]
+    for t in ts:
+        sim.add_turn(t)
+    sim.run()
+    starts = [t.start for t in ts]
+    assert starts == sorted(starts)
+
+
+def test_mlfq_prioritizes_interactive_over_background():
+    sim = Simulator(make_policy("mlfq"), SimConfig(lanes=1, use_reaper=True))
+    bg = [_mk(agent="bg", arrival=0.0, service=5.0,
+              qc=QueueClass.BACKGROUND) for _ in range(3)]
+    ia = _mk(agent="ui", arrival=0.5, service=1.0,
+             qc=QueueClass.INTERACTIVE)
+    for t in bg + [ia]:
+        sim.add_turn(t)
+    sim.run()
+    # interactive jumps all queued background work (one bg already running)
+    assert ia.start < bg[1].start and ia.start < bg[2].start
+
+
+def test_zombie_reaped_and_lane_freed():
+    sim = Simulator(make_policy("mlfq"),
+                    SimConfig(lanes=1, use_reaper=True, seed=3))
+    z = _mk(arrival=0.0, service=2.0, hangs=True)
+    after = _mk(arrival=1.0, service=1.0)
+    sim.add_turn(z)
+    sim.add_turn(after)
+    m = sim.run()
+    assert m.recovered + m.zombies == 1         # resolved one way or another
+    assert after.end is not None                # lane was freed for it
+    if m.zombies:
+        assert z.hold <= 35.0                   # reaped, not hung for 80 s
+
+
+def test_baseline_zombie_holds_full_hang():
+    sim = Simulator(make_policy("fifo"), SimConfig(lanes=1))
+    z = _mk(arrival=0.0, service=2.0, hangs=True, hang_dur=80.0)
+    sim.add_turn(z)
+    m = sim.run()
+    assert m.zombies == 1
+    assert 79.0 <= z.hold <= 81.0
+
+
+def test_rr_preemption_preserves_progress():
+    sim = Simulator(make_policy("rr"), SimConfig(lanes=1))
+    t1 = _mk(arrival=0.0, service=3.0)
+    t2 = _mk(arrival=0.0, service=3.0)
+    sim.add_turn(t1)
+    sim.add_turn(t2)
+    m = sim.run()
+    assert m.completed == 2
+    # both finish around 6s total work — interleaved, neither starved
+    assert abs(t1.end - t2.end) <= 1.5
+
+
+def test_token_bucket_refills():
+    tb = TokenBucket(rate=100.0, burst=200.0)
+    assert tb.try_consume(200, now=0.0)
+    assert not tb.try_consume(1, now=0.0)
+    assert tb.try_consume(100, now=1.0)         # refilled 100
+
+
+def test_drf_prefers_low_share_agent():
+    drf = DRFAccountant(total_lanes=4, total_token_rate=1000)
+    drf.acquire("hog", lanes=3, tokens=900)
+    pol = MLFQPolicy(drf=drf)
+    hog = _mk(agent="hog")
+    meek = _mk(agent="meek")
+    pol.enqueue(hog, 0.0)
+    pol.enqueue(meek, 0.0)
+    assert pol.dequeue(0.0) is meek
+
+
+@pytest.mark.parametrize("scenario", list(SCENARIOS))
+def test_paper_claims_hold(scenario):
+    """The paper's qualitative claims must hold on every scenario."""
+    scn = SCENARIOS[scenario]
+    fifo = run_policy("fifo", make_turns(scn, seed=0), lanes=scn.lanes)
+    mlfq = run_policy("mlfq", make_turns(scn, seed=0), lanes=scn.lanes)
+    assert mlfq.zombies <= fifo.zombies
+    assert mlfq.lane_waste_s <= fifo.lane_waste_s
+    assert mlfq.starved == 0
+    if fifo.zombies >= 5:       # loaded scenarios: the headline improvements
+        assert mlfq.p95_ms < fifo.p95_ms
+        # arrival-limited scenarios (cascade) have ~equal tput; saturated
+        # ones (high_load/faulty) must improve outright — like the paper
+        assert mlfq.throughput_per_min >= 0.95 * fifo.throughput_per_min
+        if fifo.zombies >= 19:
+            assert mlfq.throughput_per_min > fifo.throughput_per_min
+        assert mlfq.lane_waste_s < 0.1 * fifo.lane_waste_s   # ~96% reduction
+    assert mlfq.recovered > 0 or not any(
+        t.hangs for t in make_turns(scn, seed=0))
+
+
+def test_determinism_same_seed():
+    scn = SCENARIOS["faulty"]
+    a = run_policy("mlfq", make_turns(scn, seed=7), lanes=3, seed=7)
+    b = run_policy("mlfq", make_turns(scn, seed=7), lanes=3, seed=7)
+    assert a == b

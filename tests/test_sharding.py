@@ -1,0 +1,77 @@
+"""Sharding rules + dry-run integration (subprocess: needs 512 host devices,
+which must be forced before jax initialises)."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.distributed.sharding import batch_axes, param_pspec
+from repro.models import abstract_params
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+class FakeMesh:
+    shape = {"data": 16, "model": 16}
+
+
+def _pspecs(arch):
+    cfg = get_config(arch)
+    params = abstract_params(cfg)
+    out = {}
+    def visit(path, leaf):
+        name = "/".join(str(getattr(k, "key", "?")) for k in path)
+        out[name] = param_pspec(cfg, FakeMesh(), path, leaf)
+        return leaf
+    jax.tree_util.tree_map_with_path(visit, params)
+    return out
+
+
+def test_param_rules_2d_shard_big_matrices():
+    specs = _pspecs("deepseek-67b")
+    assert specs["embed"] == jax.sharding.PartitionSpec("model", "data")
+    # scanned layer weights: leading None then (data, model)
+    wq = specs["layers/attn/wq"]
+    assert wq[0] is None and wq[1] == "data" and wq[2] == "model"
+    # norms replicated (all-None spec)
+    assert all(ax is None for ax in specs["final_norm"])
+
+
+def test_kv_proj_replicated_when_heads_indivisible():
+    specs = _pspecs("chatglm3-6b")        # hkv=2 < 16
+    wk = specs["layers/attn/wk"]
+    assert wk[-1] is None, "kv projection must not shard over model"
+    specs64 = _pspecs("deepseek-67b")     # hkv=8 < 16 -> also replicated
+    assert specs64["layers/attn/wk"][-1] is None
+
+
+def test_moe_experts_on_model_axis():
+    specs = _pspecs("llama4-scout-17b-a16e")
+    wg = specs["layers/moe/w_gate"]
+    assert wg[-3] == "model" and wg[-2] == "data"
+
+
+def test_batch_axes_divisibility():
+    assert batch_axes(FakeMesh(), 256) == ("data",)
+    assert batch_axes(FakeMesh(), 1) is None
+
+
+@pytest.mark.slow
+def test_dryrun_cell_compiles_in_subprocess():
+    """One real lower+compile on the 16x16 production mesh."""
+    out = os.path.join("/tmp", "dryrun_test")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "whisper-tiny", "--shape", "decode_32k", "--mesh", "single",
+         "--out", out],
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+        capture_output=True, text=True, timeout=540)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    with open(os.path.join(out, "whisper-tiny__decode_32k__single.json")) as f:
+        cell = json.load(f)
+    assert cell["ok"] and cell["n_devices"] == 256
+    assert cell["hlo_flops_per_device"] > 0
