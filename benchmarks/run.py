@@ -18,6 +18,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--skip-paging", action="store_true",
+                    help="skip the JAX paged-vs-dense engine scenario")
     args = ap.parse_args()
 
     csv_lines = ["name,us_per_call,derived"]
@@ -59,6 +61,30 @@ def main() -> None:
                 f"ctx_{name}_{r['Method']},{us:.1f},"
                 f"retention={r['retention']:.3f};quality={r['quality']:.2f};"
                 f"cost={r['compact_cost']}")
+
+    if not args.skip_paging:
+        from benchmarks import paging as paging_bench
+        print()
+        print("=" * 72)
+        print("AgentRM benchmarks — paged KV cache (dense vs paged serving)")
+        print("=" * 72)
+        rows, us = paging_bench.paging(seed=args.seed)
+        print()
+        print(paging_bench.format_table("hibernate_heavy", rows))
+        dense = next(r for r in rows if r["Method"] == "dense-slots")
+        paged = next(r for r in rows if r["Method"] == "paged-blocks")
+        for r in rows:
+            csv_lines.append(
+                f"paging_{r['Method']},{us:.1f},"
+                f"decode_ms={r['decode_ms']};hib_bytes={r['hib_bytes']};"
+                f"peak_live={r['peak_live_tokens']}")
+        csv_lines.append(
+            f"paging_hib_bytes_reduction,{us:.1f},"
+            f"{1 - paged['hib_bytes'] / max(dense['hib_bytes'], 1):.3f}")
+        csv_lines.append(
+            f"paging_live_ctx_gain,{us:.1f},"
+            f"{paged['peak_live_tokens'] / max(dense['peak_live_tokens'], 1):.2f}x")
+        print("\n[paging] wrote BENCH_paging.json")
 
     if not args.skip_roofline:
         import os

@@ -7,6 +7,12 @@
 
 Write-back: T0 evictions persist lazily; every message is journaled to T2 on
 arrival (write-ahead style) so hibernation/restore never loses data.
+
+The same tiering applies to *device* state: a hibernated agent's KV-cache
+pages move from the accelerator pool (T0 analogue) into the host-RAM
+``KVSwapStore`` below (T1 analogue — the swap device of the paging
+subsystem, see ``repro.serving.paging``), instead of copying whole dense
+``max_len`` cache slices.
 """
 from __future__ import annotations
 
@@ -108,3 +114,49 @@ class ColdStore:
             return []
         with open(self.path) as f:
             return [json.loads(l) for l in f]
+
+
+KV_SWAP_LATENCY_S = 0.05
+
+
+class KVSwapStore:
+    """Host-RAM swap tier for paged KV-cache pages (virtual memory for agent
+    sessions: the CLM's hibernation tier applied to device state).
+
+    Stores opaque page payloads keyed by session id, with byte accounting so
+    benchmarks can report swap traffic. Latency is simulated bookkeeping
+    only (``KV_SWAP_LATENCY_S`` per transfer), matching the T1/T2 stores.
+    """
+
+    def __init__(self):
+        self._pages: dict = {}
+        self._bytes: dict = {}
+        self.bytes_stored = 0
+        self.bytes_in = 0           # device -> host (swap-out traffic)
+        self.bytes_out = 0          # host -> device (swap-in traffic)
+        self.accesses = 0
+
+    def put(self, key, payload, nbytes: int):
+        assert key not in self._pages, f"session {key!r} already swapped out"
+        self._pages[key] = payload
+        self._bytes[key] = nbytes
+        self.bytes_stored += nbytes
+        self.bytes_in += nbytes
+        self.accesses += 1
+
+    def peek(self, key):
+        return self._pages[key]
+
+    def pop(self, key):
+        payload = self._pages.pop(key)
+        nbytes = self._bytes.pop(key)
+        self.bytes_stored -= nbytes
+        self.bytes_out += nbytes
+        self.accesses += 1
+        return payload
+
+    def __contains__(self, key) -> bool:
+        return key in self._pages
+
+    def __len__(self) -> int:
+        return len(self._pages)

@@ -129,6 +129,29 @@ class AgentRM:
                     physical_tokens=self.cfg.physical_tokens)
             return self.clm[agent_id]
 
+    def hibernate_agent(self, agent_id: str, path: Optional[str] = None):
+        """CLM tier transition active -> hibernated: serialise the text-side
+        session (CRIU-style JSON, if ``path`` given) and swap the agent's
+        KV-cache pages to the host-RAM tier when the backend is paged
+        (O(live pages); the dense extract_slot path copied O(max_len))."""
+        if path is not None:
+            self.context_for(agent_id).hibernate(path)
+        hib = getattr(self.backend, "hibernate_session", None)
+        if hib is not None:
+            hib(agent_id)
+
+    def wake_agent(self, agent_id: str, path: Optional[str] = None):
+        """Inverse tier transition: restore the CLM (if ``path`` given) and
+        rebind the agent's swapped KV pages to fresh device blocks."""
+        if path is not None:
+            with self._lock:
+                self.clm[agent_id] = ContextLifecycleManager.restore(
+                    path, limit_tokens=self.cfg.context_limit_tokens,
+                    physical_tokens=self.cfg.physical_tokens)
+        wake = getattr(self.backend, "wake_session", None)
+        if wake is not None:
+            wake(agent_id)
+
     def shutdown(self):
         self._stop.set()
         self._wake.set()
@@ -180,11 +203,16 @@ class AgentRM:
         try:
             out = self.backend.generate(turn.agent_id, context, prompt,
                                         heartbeat, cancelled)
-            if cancelled.is_set():
-                raise ZombieKilled(f"turn {turn.tid} reaped")
-            t = turn._enq_at  # arrival bookkeeping for CLM turn ids
-            clm.add(Message(role="user", text=prompt, turn=clm._clock + 1))
-            clm.add(Message(role="assistant", text=out, turn=clm._clock + 1))
+            # a backend that returns *after* the reaper decided to kill it
+            # must not record its output — check-and-record atomically so the
+            # reaper can't set `cancelled` between the check and the CLM write
+            with self._lock:
+                if cancelled.is_set():
+                    raise ZombieKilled(f"turn {turn.tid} reaped")
+                clm.add(Message(role="user", text=prompt,
+                                turn=clm._clock + 1))
+                clm.add(Message(role="assistant", text=out,
+                                turn=clm._clock + 1))
             self.monitor.on_context(turn.agent_id, clm.window_tokens,
                                     clm.limit)
             turn.state = TurnState.DONE
@@ -206,19 +234,26 @@ class AgentRM:
             time.sleep(self.cfg.reaper_period_s)
             now = time.monotonic()
             with self._lock:
+                # a record whose cancelled flag is already set has been
+                # condemned — re-reaping it would double-count zombies
                 hanging = [r for r in self._running.values()
-                           if now - r["last_beat"] > self.cfg.detect_after_s]
+                           if now - r["last_beat"] > self.cfg.detect_after_s
+                           and not r["cancelled"].is_set()]
             for rec in hanging:
-                turn: Turn = rec["turn"]
-                turn.retries += 1
-                if (turn.retries <= self.cfg.max_retries
-                        and self.rng.random() < self.cfg.recover_p):
-                    # probabilistic recovery: nudge the backend via heartbeat
-                    # reset; transient stalls resume on their own
-                    rec["last_beat"] = now
-                    turn.recovered = True
-                    self.monitor.on_reap(recovered=True)
-                elif turn.retries > self.cfg.max_retries:
-                    turn.was_zombie = True
-                    rec["cancelled"].set()
-                    self.monitor.on_reap(recovered=False)
+                # the kill decision must happen under the same lock as the
+                # worker's check-and-record, or a backend returning right now
+                # could still commit its output after we condemn it
+                with self._lock:
+                    turn: Turn = rec["turn"]
+                    turn.retries += 1
+                    if (turn.retries <= self.cfg.max_retries
+                            and self.rng.random() < self.cfg.recover_p):
+                        # probabilistic recovery: nudge the backend via
+                        # heartbeat reset; transient stalls resume on their own
+                        rec["last_beat"] = now
+                        turn.recovered = True
+                        self.monitor.on_reap(recovered=True)
+                    elif turn.retries > self.cfg.max_retries:
+                        turn.was_zombie = True
+                        rec["cancelled"].set()
+                        self.monitor.on_reap(recovered=False)

@@ -1,0 +1,112 @@
+"""Pallas TPU paged decode attention: page-table-indirected split-K.
+
+Same flash-decoding structure as ``kernels/decode_attention`` (one query
+token per (batch, head), online-softmax stats carried in VMEM scratch along
+a sequential grid axis) — but the KV cache is *paged*: keys/values live in a
+pooled ``(num_blocks, blk, hkv, d)`` array shared by all sequences, and each
+sequence owns an int32 page table naming its blocks in position order.
+
+Both the per-sequence valid lengths and the page tables arrive via scalar
+prefetch, so the BlockSpec index maps can compute each grid step's HBM block
+address *before* the body runs: step (b, h, j) DMAs pool block
+``page_table[b, j]`` — a hardware-paced gather, no materialised contiguous
+copy of the cache. Pages fully beyond ``lens[b]`` are skipped with
+``@pl.when`` so decode cost stays O(kv_len) per sequence, and the partial
+last page is masked inside the online softmax. ``interpret=True`` runs the
+same kernel on CPU for tests.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+from repro.kernels.compat import CompilerParams as _CompilerParams
+
+NEG_INF = -1e30
+
+
+def _kernel(lens_ref, pt_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+            acc_scr, *, scale: float, blk: int, npages: int):
+    bi = pl.program_id(0)
+    pi = pl.program_id(2)
+    kv_len = lens_ref[bi]
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(pi * blk < kv_len)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)           # (1, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)     # (blk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = pi * blk + jax.lax.broadcasted_iota(jnp.int32, (1, blk), 1)
+        s = jnp.where(kpos < kv_len, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)     # (blk, dv)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(pi == npages - 1)
+    def _fini():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_attention_bhd(q, k_pool, v_pool, lens, page_tables, *, scale=None,
+                        interpret: bool = False):
+    """q: (b, hq, d); k_pool: (nb, blk, hkv, d); v_pool: (nb, blk, hkv, dv);
+    lens: (b,) int32 valid lengths; page_tables: (b, npages) int32 block ids
+    (entries beyond ceil(lens/blk) must be valid indices, e.g. 0).
+    Returns (b, hq, dv)."""
+    b, hq, d = q.shape
+    nb, blk, hkv, dv = (k_pool.shape[0], k_pool.shape[1], k_pool.shape[2],
+                        v_pool.shape[-1])
+    g = hq // hkv
+    npages = page_tables.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    q4 = q.reshape(b, hq, 1, d)
+    kern = functools.partial(_kernel, scale=scale, blk=blk, npages=npages)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b, hq, npages),
+            in_specs=[
+                pl.BlockSpec((1, 1, 1, d),
+                             lambda b_, h, j, lens_, pt: (b_, h, 0, 0)),
+                pl.BlockSpec((1, blk, 1, d),
+                             lambda b_, h, j, lens_, pt, g=g:
+                             (pt[b_, j], 0, h // g, 0)),
+                pl.BlockSpec((1, blk, 1, dv),
+                             lambda b_, h, j, lens_, pt, g=g:
+                             (pt[b_, j], 0, h // g, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, 1, dv),
+                                   lambda b_, h, j, lens_, pt: (b_, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1,), jnp.float32),
+                pltpu.VMEM((1,), jnp.float32),
+                pltpu.VMEM((1, dv), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hq, 1, dv), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(jnp.asarray(lens, jnp.int32).reshape(b),
+      jnp.asarray(page_tables, jnp.int32), q4, k_pool, v_pool)
+    return out.reshape(b, hq, dv)

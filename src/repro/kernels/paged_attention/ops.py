@@ -1,0 +1,19 @@
+"""Public wrapper for paged decode attention: model layout (b, 1, hq, d)
+queries against the pooled block cache (num_blocks, blk, hkv, d) + per-
+sequence page tables. The pool layout is the allocator's native layout, so
+no transpose or gather of the cache happens on the hot path — the kernel's
+index maps do the page walk."""
+from __future__ import annotations
+
+from repro.kernels.paged_attention.kernel import paged_attention_bhd
+
+
+def paged_attention(q, k_pool, v_pool, lens, page_tables, *, scale=None,
+                    interpret: bool = False):
+    """q: (b, 1, hq, d); k_pool/v_pool: (nb, blk, hkv, d|dv); lens: (b,)
+    valid kv lengths; page_tables: (b, npages) int32. Returns (b, 1, hq, dv).
+    """
+    b, one, hq, d = q.shape
+    o = paged_attention_bhd(q[:, 0], k_pool, v_pool, lens, page_tables,
+                            scale=scale, interpret=interpret)
+    return o.reshape(b, 1, hq, -1)

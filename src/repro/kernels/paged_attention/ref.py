@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for paged decode attention: gather each sequence's pages
+in table order (materialising the contiguous view the kernel avoids), then
+masked softmax with per-sequence valid lengths."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_pages(pool, page_tables):
+    """pool: (nb, blk, hkv, d); page_tables: (b, npages) ->
+    (b, npages*blk, hkv, d) contiguous per-sequence view (position order)."""
+    b, npages = page_tables.shape
+    blk, hkv, d = pool.shape[1:]
+    return pool[page_tables].reshape(b, npages * blk, hkv, d)
+
+
+def paged_attention_ref(q, k_pool, v_pool, lens, page_tables, *, scale=None):
+    """q: (b, hq, d); pools: (nb, blk, hkv, d|dv); lens: (b,) int32;
+    page_tables: (b, npages) int32. Returns (b, hq, dv)."""
+    b, hq, d = q.shape
+    hkv, dv = k_pool.shape[2], v_pool.shape[-1]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    k = gather_pages(k_pool, page_tables).transpose(0, 2, 1, 3)  # (b,hkv,S,d)
+    v = gather_pages(v_pool, page_tables).transpose(0, 2, 1, 3)
+    s = k.shape[2]
+    qg = q.reshape(b, hkv, g, d)
+    sc = jnp.einsum("bhgd,bhkd->bhgk", qg.astype(jnp.float32),
+                    k.astype(jnp.float32)) * scale
+    mask = jnp.arange(s)[None] < jnp.asarray(lens)[:, None]     # (b, S)
+    sc = jnp.where(mask[:, None, None], sc, -jnp.inf)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p.astype(jnp.float32),
+                   v.astype(jnp.float32))
+    return o.reshape(b, hq, dv).astype(q.dtype)

@@ -116,6 +116,55 @@ def gqa_decode(params, x, cache_k, cache_v, cache_len, cfg: ModelConfig,
     return out, (cache_k, cache_v)
 
 
+def gqa_decode_paged(params, x, k_pool, v_pool, page_tables, cache_len,
+                     cfg: ModelConfig, *, interpret: bool = False):
+    """Paged-cache decode: one token per sequence against pooled KV blocks.
+
+    x: (b, 1, d); k_pool/v_pool: (num_blocks, blk, hkv, hd) — one layer's
+    slice of the shared block pool; page_tables: (b, npages) int32 block ids
+    in position order (entries beyond the live length must be valid ids —
+    the engine pads with the reserved null block 0); cache_len: (b,) int32
+    per-sequence lengths *before* this token.
+
+    The new token's K/V is scattered into block ``page_tables[b, len//blk]``
+    at offset ``len % blk``; rows whose page table is all-null (inactive
+    decode slots) harmlessly write to the null block. Attention then runs
+    either through the Pallas paged kernel (page-table scalar prefetch, no
+    contiguous cache copy) or a gather-based jnp path on CPU.
+    """
+    b = x.shape[0]
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    blk = k_pool.shape[1]
+    cache_len = jnp.asarray(cache_len)
+    q = (x @ params["wq"]).reshape(b, 1, hq, hd)
+    k = (x @ params["wk"]).reshape(b, 1, hkv, hd)
+    v = (x @ params["wv"]).reshape(b, 1, hkv, hd)
+    if cfg.rotary_pct > 0:
+        pos = cache_len.reshape(b, 1)
+        rot = int(hd * cfg.rotary_pct)
+        cos, sin = rope_tables(pos, rot, cfg.rope_theta)
+        q = apply_rope(q, cos, sin, cfg.rotary_pct)
+        k = apply_rope(k, cos, sin, cfg.rotary_pct)
+    rows = jnp.arange(b)
+    bids = page_tables[rows, cache_len // blk]
+    offs = cache_len % blk
+    k_pool = k_pool.at[bids, offs].set(k[:, 0].astype(k_pool.dtype))
+    v_pool = v_pool.at[bids, offs].set(v[:, 0].astype(v_pool.dtype))
+    if cfg.use_pallas:
+        from repro.kernels.paged_attention import ops as pa
+        o = pa.paged_attention(q, k_pool, v_pool, cache_len + 1, page_tables,
+                               interpret=interpret)
+    else:
+        from repro.kernels.paged_attention.ref import gather_pages
+        kg = gather_pages(k_pool, page_tables).astype(q.dtype)
+        vg = gather_pages(v_pool, page_tables).astype(q.dtype)
+        pairing = "g_major" if cfg.gqa_mode == "tiled" else "kv_major"
+        o = simple_attention(q, kg, vg, causal=False, kv_len=cache_len + 1,
+                             f32_inputs=cfg.attn_f32_inputs, pairing=pairing)
+    out = o.reshape(b, 1, hq * hd) @ params["wo"]
+    return out, (k_pool, v_pool)
+
+
 def gqa_decode_ring(params, x, cache_k, cache_v, cache_len, cfg: ModelConfig):
     """Sliding-window decode against a ring-buffer cache (zamba2 long ctx).
 

@@ -276,6 +276,45 @@ def decode_step(params, state: Dict, token, cache_len, cfg: ModelConfig):
     return _unembed(params, x, cfg), state
 
 
+def init_paged_pools(cfg: ModelConfig, num_blocks: int,
+                     block_size: int) -> Dict:
+    """Pooled paged KV state for the GQA family: per-layer block pools of
+    shape (L, num_blocks, blk, hkv, hd). Block ids are shared across layers
+    (every layer stores the same token positions in the same block id), so
+    one page table per sequence serves the whole stack."""
+    assert cfg.family in ("dense", "moe", "vlm") and cfg.mla is None, \
+        "paged KV pools target the decoder-only GQA family"
+    assert cfg.first_dense_layers == 0, \
+        "paged decode does not support heterogeneous leading layers yet"
+    ct = jnp.dtype(cfg.kv_cache_dtype or cfg.compute_dtype)
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    shape = (cfg.n_layers, num_blocks, block_size, hkv, hd)
+    return {"k": jnp.zeros(shape, ct), "v": jnp.zeros(shape, ct)}
+
+
+def decode_step_paged(params, pools: Dict, token, cache_len, page_tables,
+                      cfg: ModelConfig):
+    """Paged analogue of ``decode_step``: token (b, 1), cache_len (b,) int32
+    lengths before this token, page_tables (b, npages) int32.
+    Returns (logits (b, 1, V) f32, updated pools)."""
+    params = cast_floats(params, cfg.compute_dtype)
+    x = _embed(params, token, cfg)
+
+    def body(h, xs):
+        lp, kp, vp = xs
+        hh = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        a, (kp, vp) = attn_mod.gqa_decode_paged(
+            lp["attn"], hh, kp, vp, page_tables, cache_len, cfg)
+        h = h + a
+        m, _, _ = _mlp_or_moe(lp, h, cfg)
+        return h + m, (kp, vp)
+
+    x, (k, v) = jax.lax.scan(body, x, (params["layers"], pools["k"],
+                                       pools["v"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _unembed(params, x, cfg), {"k": k, "v": v}
+
+
 def prefill(params, batch, cfg: ModelConfig, state: Optional[Dict] = None,
             max_len: Optional[int] = None):
     """Full-sequence prefill; returns (last-position logits, filled state).

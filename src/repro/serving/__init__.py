@@ -1,4 +1,11 @@
-from repro.serving.backend import EngineBackend, byte_tokenize
+from repro.serving.backend import (EngineBackend, PagedEngineBackend,
+                                   byte_tokenize)
 from repro.serving.engine import InferenceEngine, Request
+from repro.serving.paging import (BlockAllocator, OutOfBlocksError, PageTable,
+                                  PagedInferenceEngine, PagedKVCache,
+                                  PagedRequest, SwapManager)
 
-__all__ = ["EngineBackend", "byte_tokenize", "InferenceEngine", "Request"]
+__all__ = ["EngineBackend", "PagedEngineBackend", "byte_tokenize",
+           "InferenceEngine", "Request", "BlockAllocator",
+           "OutOfBlocksError", "PageTable", "PagedInferenceEngine",
+           "PagedKVCache", "PagedRequest", "SwapManager"]

@@ -18,6 +18,72 @@ def byte_tokenize(text: str, vocab: int, max_len: int = 96) -> np.ndarray:
     return (toks[:max_len].astype(np.int32) % max(vocab - 2, 2)) + 1
 
 
+class PagedEngineBackend(ModelBackend):
+    """Persistent-session backend over the paged engine: one retained paged
+    session per agent. First turn prefills; later turns ``extend`` the
+    session (teacher-forced prompt tokens reuse the cached history), so a
+    turn's KV cost is O(new tokens), not O(whole transcript).
+
+    Implements the middleware's hibernation contract: CLM tier transitions
+    call ``hibernate_session``/``wake_session`` and the session's pages move
+    to/from the host-RAM swap tier — O(live pages) instead of the dense
+    engine's O(max_len) ``extract_slot`` copy.
+    """
+
+    def __init__(self, engine, max_new_tokens: int = 12):
+        self.engine = engine
+        self.max_new_tokens = max_new_tokens
+        self.sessions: dict = {}            # agent_id -> rid
+        self._lock = threading.Lock()
+
+    def generate(self, agent_id: str, context: str, prompt: str,
+                 heartbeat: Callable[[], None],
+                 cancelled: threading.Event) -> str:
+        toks = byte_tokenize(prompt, self.engine.cfg.vocab_size, max_len=48)
+        with self._lock:
+            rid = self.sessions.get(agent_id)
+            if rid is None:
+                rid = self.engine.submit(toks, self.max_new_tokens,
+                                         retain=True)
+                self.sessions[agent_id] = rid
+            else:
+                self.engine.extend(rid, toks, self.max_new_tokens)
+            out = None
+            try:
+                for _ in range(len(toks) + self.max_new_tokens + 8):
+                    if cancelled.is_set():
+                        raise ZombieKilled(
+                            f"turn for {agent_id} reaped mid-decode")
+                    heartbeat()
+                    for fin in self.engine.step():
+                        if fin.rid == rid:
+                            out = fin
+                    if out is not None:
+                        break
+            except BaseException:
+                # leave the session consistent (parked) so the agent's next
+                # turn can extend it; a never-prefilled session is dropped
+                self.engine.abort_turn(rid)
+                if rid not in self.engine.reqs:
+                    self.sessions.pop(agent_id, None)
+                raise
+        assert out is not None, "paged engine failed to finish turn"
+        return "tok:" + ",".join(str(t) for t in out.out_tokens)
+
+    # ------------------------------------------- hibernation contract
+    def hibernate_session(self, agent_id: str):
+        with self._lock:
+            rid = self.sessions.get(agent_id)
+            if rid is not None:
+                self.engine.hibernate(rid)
+
+    def wake_session(self, agent_id: str):
+        with self._lock:
+            rid = self.sessions.get(agent_id)
+            if rid is not None:
+                self.engine.wake(rid)
+
+
 class EngineBackend(ModelBackend):
     """Serialises middleware turns through a shared engine instance. One
     decode step per heartbeat: a stall in XLA shows up as heartbeat silence,

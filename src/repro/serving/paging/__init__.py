@@ -1,0 +1,20 @@
+"""Paged KV-cache subsystem: OS-style virtual memory for agent sessions.
+
+  allocator — fixed-size KV blocks, free list, refcounts, page tables
+  pool      — PagedKVCache: the pooled bytes + copy-on-write + page moves
+  swap      — SwapManager: host-RAM tier, LRU eviction, demand paging
+  engine    — PagedInferenceEngine: block-granular admission, retained
+              sessions, O(pages) hibernation
+
+The Pallas paged-attention decode kernel lives in
+``repro.kernels.paged_attention``.
+"""
+from repro.serving.paging.allocator import (BlockAllocator, NULL_BLOCK,
+                                            OutOfBlocksError, PageTable)
+from repro.serving.paging.engine import PagedInferenceEngine, PagedRequest
+from repro.serving.paging.pool import PagedKVCache
+from repro.serving.paging.swap import SwapManager
+
+__all__ = ["BlockAllocator", "NULL_BLOCK", "OutOfBlocksError", "PageTable",
+           "PagedInferenceEngine", "PagedRequest", "PagedKVCache",
+           "SwapManager"]

@@ -1,0 +1,109 @@
+"""Block allocator + page tables: the physical-memory layer of the paged
+KV-cache subsystem (OS analogue: the frame allocator behind virtual memory).
+
+KV storage is carved into fixed-size blocks of ``block_size`` token
+positions. The allocator hands out block *ids* from a free list and tracks a
+per-block refcount so forked sequences (shared prompt prefixes) can
+reference the same physical block; writes to a shared block go through
+copy-on-write at the pool layer.
+
+Block 0 is reserved as the **null block**: inactive rows of the fixed-width
+decode batch point their page tables at it, so their (masked, discarded)
+scatter writes land somewhere harmless instead of corrupting live data.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+NULL_BLOCK = 0
+
+
+class OutOfBlocksError(RuntimeError):
+    """Raised when the pool cannot satisfy an allocation; callers may
+    reclaim (swap out cold sequences) and retry."""
+
+
+@dataclasses.dataclass
+class PageTable:
+    """Per-sequence logical->physical mapping: ``blocks[i]`` holds token
+    positions [i*block_size, (i+1)*block_size)."""
+    block_size: int
+    blocks: List[int] = dataclasses.field(default_factory=list)
+    num_tokens: int = 0
+
+    @property
+    def num_pages(self) -> int:
+        return len(self.blocks)
+
+    @property
+    def capacity(self) -> int:
+        return len(self.blocks) * self.block_size
+
+    def block_of(self, pos: int) -> int:
+        return self.blocks[pos // self.block_size]
+
+    def padded(self, npages: int) -> List[int]:
+        """Block-id row for the device page-table tensor, null-padded."""
+        assert len(self.blocks) <= npages, \
+            f"sequence needs {len(self.blocks)} pages > table width {npages}"
+        return self.blocks + [NULL_BLOCK] * (npages - len(self.blocks))
+
+
+class BlockAllocator:
+    """Free-list allocator with per-block refcounts over ``num_blocks``
+    physical blocks (block 0 reserved as the null block)."""
+
+    def __init__(self, num_blocks: int):
+        assert num_blocks >= 2, "need at least one allocatable block + null"
+        self.num_blocks = num_blocks
+        # pop() takes from the end: serve low ids first for debuggability
+        self._free = list(range(num_blocks - 1, NULL_BLOCK, -1))
+        self.refcount = [0] * num_blocks
+
+    # ------------------------------------------------------------ queries
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return self.num_blocks - 1 - len(self._free)
+
+    def is_shared(self, bid: int) -> bool:
+        return self.refcount[bid] > 1
+
+    # ------------------------------------------------------------- alloc
+    def alloc(self) -> int:
+        if not self._free:
+            raise OutOfBlocksError(
+                f"no free KV blocks (all {self.num_blocks - 1} in use)")
+        bid = self._free.pop()
+        self.refcount[bid] = 1
+        return bid
+
+    def alloc_many(self, n: int) -> List[int]:
+        """All-or-nothing: never partially allocates on failure."""
+        if n > len(self._free):
+            raise OutOfBlocksError(
+                f"need {n} KV blocks, only {len(self._free)} free")
+        return [self.alloc() for _ in range(n)]
+
+    # ------------------------------------------------------- share / free
+    def share(self, bid: int):
+        assert self.refcount[bid] >= 1, f"sharing unallocated block {bid}"
+        self.refcount[bid] += 1
+
+    def release(self, bid: int) -> bool:
+        """Drop one reference; returns True when the block became free."""
+        assert bid != NULL_BLOCK and self.refcount[bid] >= 1, \
+            f"releasing invalid block {bid} (rc={self.refcount[bid]})"
+        self.refcount[bid] -= 1
+        if self.refcount[bid] == 0:
+            self._free.append(bid)
+            return True
+        return False
+
+    def release_many(self, bids: List[int]):
+        for bid in bids:
+            self.release(bid)

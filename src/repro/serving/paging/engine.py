@@ -1,0 +1,355 @@
+"""PagedInferenceEngine: continuous batching over the paged KV cache.
+
+Differences from the dense ``repro.serving.engine.InferenceEngine``:
+
+  * Admission is by **blocks, not slots**. A decode slot is just a row in
+    the fixed-width compute batch (cheap); what gates admission is whether
+    the block pool can hold the request's context. Short sequences no
+    longer reserve ``max_len`` of cache each, so the summed live context
+    can far exceed what slot-granularity admission could hold at equal
+    memory.
+  * Sessions are first-class. A finished request may be *retained*
+    (parked): its pages stay resident and evictable, and a later turn
+    ``extend``s it — new prompt tokens are teacher-forced through the
+    decode path, reusing the cached history. ``fork`` shares a session's
+    pages copy-on-write (prefix sharing across agent sessions).
+  * Hibernation is O(live pages): ``hibernate`` swaps a session's pages to
+    the host-RAM ``KVSwapStore`` tier; ``wake`` rebinds them to fresh
+    blocks (ids may differ, bytes are identical, decode continues
+    bit-exactly). Under block pressure the SwapManager evicts cold parked
+    sessions LRU-first — demand paging driven by CLM tier transitions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.context.tiers import KVSwapStore
+from repro.models import build
+from repro.models import transformer as tr
+from repro.serving.paging.allocator import (NULL_BLOCK, OutOfBlocksError,
+                                            PageTable)
+from repro.serving.paging.pool import PagedKVCache
+from repro.serving.paging.swap import SwapManager
+
+QUEUED, ACTIVE, PARKED, SWAPPED, FREED = \
+    "queued", "active", "parked", "swapped", "freed"
+
+
+@dataclasses.dataclass
+class PagedRequest:
+    rid: int
+    prompt: np.ndarray                       # (S,) int32
+    max_new_tokens: int = 16
+    retain: bool = False
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    forced: List[int] = dataclasses.field(default_factory=list)
+    slot: Optional[int] = None
+    table: Optional[PageTable] = None
+    last_tok: int = 0
+    state: str = QUEUED
+    done: bool = False                       # current turn finished
+
+    @property
+    def num_tokens(self) -> int:
+        return self.table.num_tokens if self.table is not None else 0
+
+
+class PagedInferenceEngine:
+    """Greedy-decode engine for the decoder-only GQA family over a paged KV
+    cache (block allocator + page tables + swap tier)."""
+
+    def __init__(self, cfg: ModelConfig, params, *, num_blocks: int = 64,
+                 block_size: int = 16, max_batch: int = 8,
+                 max_len: int = 256, swap_store: Optional[KVSwapStore] = None):
+        assert cfg.family in ("dense", "moe", "vlm"), \
+            "paged engine targets the decoder-only GQA family"
+        self.cfg = cfg
+        self.model = build(cfg)
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = min(max_len, (num_blocks - 1) * block_size)
+        self.cache = PagedKVCache(cfg, num_blocks, block_size)
+        self.swap = SwapManager(self.cache, swap_store,
+                                on_evict=self._on_evicted)
+        self.max_pages = self.cache.pages_for(self.max_len)
+
+        self.reqs: Dict[int, PagedRequest] = {}
+        self.active: Dict[int, PagedRequest] = {}
+        self.free_slots = list(range(max_batch))
+        self._queue: List[PagedRequest] = []
+        self._next_rid = 0
+        self.decode_steps = 0
+
+        self._prefill = jax.jit(self._prefill_impl)
+        self._decode = jax.jit(
+            lambda params, pools, tok, lens, tables:
+            tr.decode_step_paged(params, pools, tok, lens, tables, cfg),
+            donate_argnums=(1,))
+
+    # ---------------------------------------------------------- prefill
+    def _prefill_impl(self, params, tokens):
+        state = self.model.init_decode_state(1, tokens.shape[1])
+        logits, state = tr.prefill(params, {"tokens": tokens}, self.cfg,
+                                   state=state, max_len=tokens.shape[1])
+        return logits, state
+
+    # ----------------------------------------------------------- public
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               retain: bool = False) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        req = PagedRequest(rid, np.asarray(prompt, np.int32),
+                           max_new_tokens=max_new_tokens, retain=retain)
+        self.reqs[rid] = req
+        self._queue.append(req)
+        return rid
+
+    def extend(self, rid: int, tokens: np.ndarray,
+               max_new_tokens: int = 16) -> int:
+        """Start a new turn on a retained session: the new prompt tokens are
+        teacher-forced through the paged decode path (their KV lands in the
+        session's pages), then generation continues as usual."""
+        req = self.reqs[rid]
+        assert req.state in (PARKED, SWAPPED), \
+            f"extend needs a parked/swapped session, rid {rid} is {req.state}"
+        forced = [int(t) for t in np.asarray(tokens).reshape(-1)]
+        held = (req.num_tokens if req.state != SWAPPED
+                else self.swap.store.peek(rid)[2])
+        if held + len(forced) + 1 > self.max_len:
+            raise ValueError(
+                f"extend overflows max_len: session rid {rid} holds {held} "
+                f"tokens, {len(forced)} more won't fit in {self.max_len}")
+        req.forced = forced
+        req.max_new_tokens = max_new_tokens
+        req.out_tokens = []
+        req.done = False
+        self._queue.append(req)
+        return rid
+
+    def fork(self, rid: int) -> int:
+        """Clone a parked session copy-on-write: the clone shares every
+        resident page until either side appends to the shared tail."""
+        req = self.reqs[rid]
+        assert req.state == PARKED, \
+            f"fork needs a resident parked session, rid {rid} is {req.state}"
+        self.swap.touch(rid)        # the shared pages just became load-bearing
+        nrid = self._next_rid
+        self._next_rid += 1
+        clone = PagedRequest(nrid, req.prompt, retain=req.retain,
+                             last_tok=req.last_tok, state=PARKED,
+                             table=self.cache.fork(req.table))
+        self.reqs[nrid] = clone
+        self.swap.mark_cold(rid, req.table)
+        self.swap.mark_cold(nrid, clone.table)
+        return nrid
+
+    # ------------------------------------------------------ hibernation
+    def _on_evicted(self, rid: int):
+        """SwapManager evicted this session (explicit hibernate or LRU
+        reclaim) — its table is gone from the device either way."""
+        req = self.reqs.get(rid)
+        if req is not None:
+            req.table = None
+            req.state = SWAPPED
+
+    def hibernate(self, rid: int):
+        """Swap a session's pages to host RAM — O(live pages)."""
+        req = self.reqs[rid]
+        if req.state == SWAPPED:
+            return
+        assert req.state in (ACTIVE, PARKED), \
+            f"cannot hibernate rid {rid} in state {req.state}"
+        if req.state == ACTIVE:
+            self.free_slots.append(req.slot)
+            self.active.pop(rid)
+            req.slot = None
+        self.swap.swap_out(rid, req.table)
+
+    def wake(self, rid: int):
+        """Bring a hibernated session back to residency (parked, cold)."""
+        req = self.reqs[rid]
+        if req.state != SWAPPED:
+            return
+        req.table = self.swap.swap_in(rid)
+        req.state = PARKED
+        self.swap.mark_cold(rid, req.table)
+
+    def release(self, rid: int):
+        """Drop a session entirely, in any state (frees its decode slot,
+        queue entry, device blocks, or host pages)."""
+        req = self.reqs.pop(rid)
+        if req in self._queue:
+            self._queue.remove(req)
+        if req.state == ACTIVE:
+            self.active.pop(rid, None)
+            self.free_slots.append(req.slot)
+            req.slot = None
+        self.swap.touch(rid)
+        if req.state == SWAPPED:
+            self.swap.store.pop(rid)
+        elif req.table is not None:
+            self.cache.free_table(req.table)
+            req.table = None
+        req.state = FREED
+
+    def abort_turn(self, rid: int):
+        """Cancel an in-flight turn (zombie reap): pending prompt tokens and
+        generation are dropped; a retained session survives parked, anything
+        else is freed — so the next turn can ``extend`` normally."""
+        req = self.reqs.get(rid)
+        if req is None:
+            return
+        if req in self._queue:
+            self._queue.remove(req)
+        req.forced = []
+        req.done = True
+        if req.state == ACTIVE:
+            self.active.pop(rid, None)
+            self.free_slots.append(req.slot)
+            req.slot = None
+            if req.retain:
+                req.state = PARKED
+                self.swap.mark_cold(rid, req.table)
+            else:
+                self.cache.free_table(req.table)
+                req.table = None
+                req.state = FREED
+                self.reqs.pop(rid, None)
+        elif req.state == QUEUED:            # fresh, never prefilled
+            req.state = FREED
+            self.reqs.pop(rid, None)
+        # PARKED / SWAPPED sessions just lose the un-admitted turn
+
+    # ------------------------------------------------------------ admit
+    def _ensure_blocks(self, n: int):
+        if self.cache.allocator.num_free < n:
+            self.swap.reclaim(n)
+
+    def _admit(self):
+        while self._queue and self.free_slots:
+            req = self._queue[0]
+            try:
+                if req.state == QUEUED:
+                    self._admit_fresh(req)
+                else:
+                    self._admit_resume(req)
+            except OutOfBlocksError:
+                break               # head-of-line blocks until pages free up
+            self._queue.pop(0)
+            req.slot = self.free_slots.pop(0)
+            req.state = ACTIVE
+            self.active[req.rid] = req
+            self.swap.touch(req.rid)
+
+    def _admit_fresh(self, req: PagedRequest):
+        plen = len(req.prompt)
+        assert plen < self.max_len, "prompt longer than max_len"
+        self._ensure_blocks(self.cache.pages_for(plen))
+        pt = self.cache.alloc_table(plen)
+        try:
+            logits, pstate = self._prefill(
+                self.params, jnp.asarray(req.prompt)[None, :plen])
+        except BaseException:
+            self.cache.free_table(pt)
+            raise
+        self.cache.write_prefill(pt, pstate["k"][:, 0], pstate["v"][:, 0])
+        req.table = pt
+        tok = int(jnp.argmax(logits[0, -1]))
+        req.out_tokens.append(tok)
+        req.last_tok = tok
+
+    def _admit_resume(self, req: PagedRequest):
+        if req.state == SWAPPED:
+            self.wake(req.rid)
+        self.swap.touch(req.rid)
+
+    # ------------------------------------------------------------- step
+    def step(self) -> List[PagedRequest]:
+        """Advance every active sequence one token; returns requests whose
+        turn finished this step."""
+        self._admit()
+        if not self.active:
+            return []
+        # make every append safe: grow tables / copy-on-write shared tails,
+        # swapping out cold sessions when the pool is under pressure
+        for req in self.active.values():
+            try:
+                self.cache.ensure_capacity(req.table, req.num_tokens + 1)
+            except OutOfBlocksError:
+                self.swap.reclaim(1)
+                self.cache.ensure_capacity(req.table, req.num_tokens + 1)
+
+        lens = np.zeros((self.max_batch,), np.int32)
+        tables = np.full((self.max_batch, self.max_pages), NULL_BLOCK,
+                         np.int32)
+        toks = np.zeros((self.max_batch, 1), np.int32)
+        for req in self.active.values():
+            lens[req.slot] = req.num_tokens
+            row = req.table.padded(self.max_pages)
+            tables[req.slot] = row
+            toks[req.slot, 0] = req.last_tok
+
+        logits, pools = self._decode(
+            self.params, self.cache.pools(), jnp.asarray(toks),
+            jnp.asarray(lens), jnp.asarray(tables))
+        self.cache.set_pools(pools)
+        self.decode_steps += 1
+
+        out = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        finished = []
+        for rid, req in list(self.active.items()):
+            req.table.num_tokens += 1
+            if req.forced:
+                # teacher-forcing a new turn's prompt: ignore the model's
+                # prediction, feed the next prompt token instead
+                req.last_tok = req.forced.pop(0)
+            else:
+                tok = int(out[req.slot])
+                req.out_tokens.append(tok)
+                req.last_tok = tok
+            if ((not req.forced
+                 and len(req.out_tokens) >= req.max_new_tokens)
+                    or req.num_tokens >= self.max_len - 1):
+                req.done = True
+                finished.append(req)
+                self.free_slots.append(req.slot)
+                req.slot = None
+                del self.active[rid]
+                if req.retain:
+                    req.state = PARKED
+                    self.swap.mark_cold(rid, req.table)
+                else:
+                    self.cache.free_table(req.table)
+                    req.table = None
+                    req.state = FREED
+                    self.reqs.pop(rid, None)
+        return finished
+
+    def run_to_completion(self, max_steps: int = 512) -> List[PagedRequest]:
+        done: List[PagedRequest] = []
+        for _ in range(max_steps):
+            done += self.step()
+            if not self.active and not self._queue:
+                break
+        return done
+
+    # ------------------------------------------------------------ stats
+    def kv_stats(self) -> Dict[str, int]:
+        alloc = self.cache.allocator
+        live = sum(r.num_tokens for r in self.reqs.values()
+                   if r.table is not None)
+        return {
+            "block_size": self.cache.block_size,
+            "blocks_total": self.cache.num_blocks - 1,
+            "blocks_in_use": alloc.num_used,
+            "kv_bytes_total": self.cache.bytes_total,
+            "kv_bytes_in_use": self.cache.bytes_in_use,
+            "live_context_tokens": live,
+            **self.swap.stats(),
+        }

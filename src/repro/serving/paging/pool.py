@@ -1,0 +1,132 @@
+"""PagedKVCache: the pooled physical KV store + page-table bookkeeping.
+
+One ``(L, num_blocks, blk, hkv, hd)`` array per tensor (K and V) backs every
+sequence; block ids are shared across layers, so a single page table per
+sequence maps its token positions for the whole stack. This is the layer
+that owns the bytes: the BlockAllocator decides *which* block, this class
+moves data — prefill scatter, copy-on-write duplication, and the host<->
+device page transfers the swap tier is built on.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tr
+from repro.serving.paging.allocator import BlockAllocator, PageTable
+
+
+class PagedKVCache:
+    """Pooled paged KV storage for the decoder-only GQA family."""
+
+    def __init__(self, cfg: ModelConfig, num_blocks: int, block_size: int):
+        self.cfg = cfg
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        pools = tr.init_paged_pools(cfg, num_blocks, block_size)
+        self.k: jax.Array = pools["k"]
+        self.v: jax.Array = pools["v"]
+        self.allocator = BlockAllocator(num_blocks)
+        L, _, blk, hkv, hd = self.k.shape
+        self.block_bytes = 2 * L * blk * hkv * hd * self.k.dtype.itemsize
+
+    # ------------------------------------------------------------- pools
+    def pools(self) -> Dict:
+        """The pool pytree handed to (and returned by) the jitted paged
+        decode step; write the result back via ``set_pools``."""
+        return {"k": self.k, "v": self.v}
+
+    def set_pools(self, pools: Dict):
+        self.k, self.v = pools["k"], pools["v"]
+
+    # ------------------------------------------------------------- sizes
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    @property
+    def bytes_in_use(self) -> int:
+        return self.allocator.num_used * self.block_bytes
+
+    @property
+    def bytes_total(self) -> int:
+        return (self.num_blocks - 1) * self.block_bytes
+
+    # ----------------------------------------------------------- tables
+    def alloc_table(self, n_tokens: int) -> PageTable:
+        blocks = self.allocator.alloc_many(self.pages_for(n_tokens))
+        return PageTable(self.block_size, blocks, 0)
+
+    def free_table(self, pt: PageTable):
+        self.allocator.release_many(pt.blocks)
+        pt.blocks = []
+        pt.num_tokens = 0
+
+    def fork(self, pt: PageTable) -> PageTable:
+        """Share every block with a new sequence (prefix sharing / agent
+        fork). O(pages) bookkeeping, zero bytes copied — divergent writes
+        trigger copy-on-write in ``ensure_capacity``."""
+        for bid in pt.blocks:
+            self.allocator.share(bid)
+        return PageTable(pt.block_size, list(pt.blocks), pt.num_tokens)
+
+    # ------------------------------------------------------ write paths
+    def ensure_capacity(self, pt: PageTable, n_tokens: int):
+        """Make the next write (token positions up to ``n_tokens``) safe:
+        grow the table block-by-block and copy-on-write a shared tail block
+        so appends never mutate another sequence's data."""
+        if n_tokens > pt.num_tokens and pt.num_tokens < pt.capacity:
+            # the block being appended into must be exclusively owned
+            self._unshare(pt, pt.num_tokens // self.block_size)
+        while pt.capacity < n_tokens:
+            pt.blocks.append(self.allocator.alloc())
+
+    def _unshare(self, pt: PageTable, page_idx: int):
+        bid = pt.blocks[page_idx]
+        if not self.allocator.is_shared(bid):
+            return
+        new = self.allocator.alloc()
+        self.k = self.k.at[:, new].set(self.k[:, bid])
+        self.v = self.v.at[:, new].set(self.v[:, bid])
+        self.allocator.release(bid)
+        pt.blocks[page_idx] = new
+
+    def write_prefill(self, pt: PageTable, k_pre, v_pre):
+        """Scatter prefill KV (L, plen, hkv, hd) into the sequence's blocks
+        in one batched update (the last partial page is zero-padded)."""
+        L, plen = k_pre.shape[0], k_pre.shape[1]
+        self.ensure_capacity(pt, plen)
+        pages = self.pages_for(plen)
+        pad = pages * self.block_size - plen
+        bids = np.asarray(pt.blocks[:pages], np.int32)
+
+        def put(pool, pre):
+            pre = pre.astype(pool.dtype)
+            if pad:
+                pre = jnp.pad(pre, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            pre = pre.reshape(L, pages, self.block_size, *pre.shape[2:])
+            return pool.at[:, bids].set(pre)
+
+        self.k = put(self.k, k_pre)
+        self.v = put(self.v, v_pre)
+        pt.num_tokens = plen
+
+    # ------------------------------------------------- swap (host pages)
+    def gather(self, pt: PageTable) -> Tuple[np.ndarray, np.ndarray]:
+        """Copy a sequence's live pages to host memory (L, pages, blk, hkv,
+        hd) — O(dirty pages), not O(max_len)."""
+        bids = np.asarray(pt.blocks, np.int32)
+        return np.asarray(self.k[:, bids]), np.asarray(self.v[:, bids])
+
+    def scatter(self, k_pages: np.ndarray, v_pages: np.ndarray,
+                num_tokens: int) -> PageTable:
+        """Rebind host pages to freshly allocated device blocks (swap-in)."""
+        pages = k_pages.shape[1]
+        blocks = self.allocator.alloc_many(pages)
+        bids = np.asarray(blocks, np.int32)
+        self.k = self.k.at[:, bids].set(jnp.asarray(k_pages, self.k.dtype))
+        self.v = self.v.at[:, bids].set(jnp.asarray(v_pages, self.v.dtype))
+        return PageTable(self.block_size, blocks, num_tokens)

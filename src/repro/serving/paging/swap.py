@@ -1,0 +1,103 @@
+"""SwapManager: the swap-device layer of the paged KV subsystem.
+
+Moves a sequence's live pages between the device block pool and the host-RAM
+``KVSwapStore`` tier (``repro.core.context.tiers``) — the engine-level
+mechanism behind CLM hibernation. Eviction is LRU over *cold* sequences
+(resident but not decoding — parked agent sessions between turns): under
+block pressure ``reclaim`` swaps the least-recently-used cold sequence out
+until the allocator can satisfy the request, which is exactly demand paging
+with the CLM's tier transitions as the access pattern.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, Optional
+
+from repro.core.context.tiers import KVSwapStore
+from repro.serving.paging.allocator import OutOfBlocksError, PageTable
+from repro.serving.paging.pool import PagedKVCache
+
+
+class SwapManager:
+    def __init__(self, cache: PagedKVCache,
+                 store: Optional[KVSwapStore] = None, on_evict=None):
+        self.cache = cache
+        self.store = store or KVSwapStore()
+        # owner's bookkeeping hook: called with the key after any swap-out
+        # (explicit hibernation or LRU reclaim) so request state stays true
+        self.on_evict = on_evict
+        # key -> PageTable of resident-but-cold sequences, LRU order (oldest
+        # first); only these are eviction candidates.
+        self._cold: "OrderedDict[object, PageTable]" = OrderedDict()
+        self.swaps_out = 0
+        self.swaps_in = 0
+
+    # ------------------------------------------------------- temperature
+    def mark_cold(self, key, pt: PageTable):
+        """Register a resident sequence as evictable (e.g. its agent's turn
+        ended or its CLM tier demoted it)."""
+        self._cold[key] = pt
+        self._cold.move_to_end(key)
+
+    def touch(self, key):
+        """The sequence is hot again (about to decode) — shield it from
+        eviction."""
+        self._cold.pop(key, None)
+
+    def is_resident(self, key) -> bool:
+        return key not in self.store
+
+    # ------------------------------------------------------------- moves
+    def swap_out(self, key, pt: PageTable) -> int:
+        """Device -> host: copy live pages out, free the device blocks.
+        Returns bytes moved (O(live pages), not O(max_len))."""
+        k_pages, v_pages = self.cache.gather(pt)
+        nbytes = k_pages.nbytes + v_pages.nbytes
+        self.store.put(key, (k_pages, v_pages, pt.num_tokens), nbytes)
+        self.cache.free_table(pt)
+        self._cold.pop(key, None)
+        self.swaps_out += 1
+        if self.on_evict is not None:
+            self.on_evict(key)
+        return nbytes
+
+    def swap_in(self, key) -> PageTable:
+        """Host -> device: rebind the stored pages to fresh blocks (the ids
+        may differ — the page table is remapped, data is bit-identical).
+        Reclaims cold sequences if the pool is under pressure."""
+        k_pages, _, _ = self.store.peek(key)
+        self.reclaim(k_pages.shape[1], exclude=key)
+        k_pages, v_pages, num_tokens = self.store.pop(key)
+        pt = self.cache.scatter(k_pages, v_pages, num_tokens)
+        self.swaps_in += 1
+        return pt
+
+    # ----------------------------------------------------------- reclaim
+    def reclaim(self, n_blocks: int, exclude=None) -> int:
+        """Evict LRU cold sequences until ``n_blocks`` are free (or nothing
+        is left to evict). Returns blocks freed; raises OutOfBlocksError if
+        the target is unreachable."""
+        freed = 0
+        while self.cache.allocator.num_free < n_blocks:
+            victim = next((k for k in self._cold if k != exclude), None)
+            if victim is None:
+                raise OutOfBlocksError(
+                    f"need {n_blocks} free KV blocks, have "
+                    f"{self.cache.allocator.num_free} and no cold sequences "
+                    "left to evict")
+            pt = self._cold[victim]
+            before = self.cache.allocator.num_free
+            self.swap_out(victim, pt)
+            freed += self.cache.allocator.num_free - before
+        return freed
+
+    # ------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, int]:
+        return {
+            "swaps_out": self.swaps_out,
+            "swaps_in": self.swaps_in,
+            "swap_bytes_out": self.store.bytes_in,
+            "swap_bytes_in": self.store.bytes_out,
+            "swap_bytes_held": self.store.bytes_stored,
+            "swapped_sessions": len(self.store),
+        }

@@ -1,7 +1,11 @@
 """Hypothesis property tests on system invariants."""
 import math
 
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis dev dependency")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.context import (ContextLifecycleManager, Message, Summarizer,
                                 count_tokens)
