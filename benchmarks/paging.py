@@ -50,8 +50,12 @@ def _timed_drain(engine, max_steps=400) -> Tuple[float, int, int]:
             peak = max(peak, live)
         if not engine.active and not engine._queue:
             break
-    # drop the first step (jit warmup dominates it)
+    # steady state: jit compiles (prefill/decode/page-scatter trace per shape
+    # bucket) can land in *any* early step, not just the first — drop the
+    # first step and any compile-dominated outlier (> 5x the median)
     steady = times[1:] or times
+    med = sorted(steady)[len(steady) // 2]
+    steady = [t for t in steady if t <= 5 * med] or steady
     return sum(steady) / len(steady), len(times), peak
 
 

@@ -20,6 +20,8 @@ def main() -> None:
     ap.add_argument("--skip-roofline", action="store_true")
     ap.add_argument("--skip-paging", action="store_true",
                     help="skip the JAX paged-vs-dense engine scenario")
+    ap.add_argument("--skip-sched-live", action="store_true",
+                    help="skip the live fused-vs-serialized scheduling run")
     args = ap.parse_args()
 
     csv_lines = ["name,us_per_call,derived"]
@@ -85,6 +87,24 @@ def main() -> None:
             f"paging_live_ctx_gain,{us:.1f},"
             f"{paged['peak_live_tokens'] / max(dense['peak_live_tokens'], 1):.2f}x")
         print("\n[paging] wrote BENCH_paging.json")
+
+    if not args.skip_sched_live:
+        from benchmarks import sched_live as live_bench
+        print()
+        print("=" * 72)
+        print("AgentRM benchmarks — live scheduling "
+              "(serialized lanes vs fused MLFQ)")
+        print("=" * 72)
+        rows, speedup = live_bench.sched_live(seed=args.seed)
+        print()
+        print(live_bench.format_table(rows, speedup))
+        for r in rows:
+            csv_lines.append(
+                f"sched_live_{r['Method']},0.0,"
+                f"tokens_per_s={r['tokens_per_s']};zombies={r['zombies']};"
+                f"steps={r['decode_steps']}")
+        csv_lines.append(f"sched_live_fused_speedup,0.0,{speedup:.2f}x")
+        print("\n[sched_live] wrote BENCH_sched_live.json")
 
     if not args.skip_roofline:
         import os

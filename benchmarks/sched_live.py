@@ -1,0 +1,165 @@
+"""Live scheduling benchmark: serialized lanes vs the fused MLFQ dispatcher
+at equal hardware.
+
+Both runs drive the SAME paged engine configuration (same model, same block
+pool, same ``max_batch``) through the AgentRM middleware with a multi-agent,
+multi-turn workload. The only difference is who owns the inference loop:
+
+  * ``serialized-lanes`` — the pre-fusion design: thread-per-lane dispatch
+    over ``SerializedPagedBackend``, whose ``generate`` holds a backend-wide
+    lock for the whole decode loop. Turns serialize through an engine built
+    for continuous batching; the decode batch never holds more than one
+    live sequence.
+  * ``fused-mlfq`` — the iteration-level design: one dispatcher loop admits
+    turns from the MLFQ queues into the engine's decode batch and steps the
+    union, with token quanta, in-place preemption and between-step reaping.
+
+Reports per mode: wall seconds, decoded tokens/sec, engine decode steps,
+zombies (must be 0), completed turns. Emits ``BENCH_sched_live.json``.
+
+    PYTHONPATH=src python -m benchmarks.sched_live [--smoke] [--check]
+
+``--check`` exits non-zero if the fused run reaped any zombies or failed a
+turn — the CI smoke gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import List
+
+import numpy as np
+
+
+def _count_tokens(outs: List[str]) -> int:
+    return sum(len(o.split(",")) for o in outs if o.startswith("tok:"))
+
+
+def _drive(rm, agents: int, turns: int, timeout: float = 600.0):
+    """Submit `turns` rounds of one turn per agent (round n+1 extends the
+    sessions round n parked); returns (wall_s, tokens, completed)."""
+    # uncounted warmup turn: pays the jit compiles (chunk prefill + decode)
+    # so both modes are measured steady-state, like the paging benchmark
+    rm.submit("warmup", "compile everything once").result(timeout)
+    outs: List[str] = []
+    t0 = time.perf_counter()
+    for turn in range(turns):
+        handles = [rm.submit(f"agent{i}", f"turn {turn} for agent {i}")
+                   for i in range(agents)]
+        outs += [h.result(timeout) for h in handles]
+    wall = time.perf_counter() - t0
+    return wall, _count_tokens(outs), len(outs)
+
+
+def sched_live(seed: int = 0, *, agents: int = 8, turns: int = 2,
+               max_batch: int = 8, new_tokens: int = 8,
+               num_blocks: int = 129, block_size: int = 8,
+               prefill_chunk: int = 16):
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.core import AgentRM, AgentRMConfig
+    from repro.models import build
+    from repro.serving import (PagedEngineBackend, PagedInferenceEngine,
+                               SerializedPagedBackend)
+
+    cfg = get_smoke_config("gemma-2b").replace(remat=False)
+    model = build(cfg)
+    params = model.init_params(jax.random.PRNGKey(seed))
+
+    def make_engine():
+        return PagedInferenceEngine(
+            cfg, params, num_blocks=num_blocks, block_size=block_size,
+            max_batch=max_batch, max_len=96, prefill_chunk=prefill_chunk)
+
+    def make_rm(backend):
+        # generous detect_after: neither mode should reap healthy turns that
+        # are merely queued behind the backend lock / the decode batch
+        return AgentRM(backend, AgentRMConfig(
+            lanes=max_batch, detect_after_s=300.0, seed=seed))
+
+    rows = []
+    for mode, backend_cls in (("serialized-lanes", SerializedPagedBackend),
+                              ("fused-mlfq", PagedEngineBackend)):
+        eng = make_engine()
+        rm = make_rm(backend_cls(eng, max_new_tokens=new_tokens))
+        try:
+            wall, tokens, completed = _drive(rm, agents, turns)
+            snap = rm.monitor.snapshot()
+            rows.append({
+                "Method": mode,
+                "wall_s": round(wall, 2),
+                "tokens": tokens,
+                "tokens_per_s": round(tokens / wall, 2),
+                "decode_steps": eng.decode_steps,
+                "completed_turns": completed,
+                "zombies": snap.zombies_reaped,
+                "recoveries": snap.recoveries,
+            })
+        finally:
+            rm.shutdown()
+
+    serial = next(r for r in rows if r["Method"] == "serialized-lanes")
+    fused = next(r for r in rows if r["Method"] == "fused-mlfq")
+    speedup = fused["tokens_per_s"] / max(serial["tokens_per_s"], 1e-9)
+    payload = {
+        "config": {"agents": agents, "turns": turns, "max_batch": max_batch,
+                   "new_tokens": new_tokens, "num_blocks": num_blocks,
+                   "block_size": block_size, "prefill_chunk": prefill_chunk,
+                   "seed": seed},
+        "rows": rows,
+        "fused_speedup_tokens_per_s": round(speedup, 2),
+    }
+    with open("BENCH_sched_live.json", "w") as f:
+        json.dump(payload, f, indent=2)
+    return rows, speedup
+
+
+def format_table(rows: List[dict], speedup: float) -> str:
+    hdr = ["Method", "wall_s", "tokens", "tokens_per_s", "decode_steps",
+           "completed_turns", "zombies", "recoveries"]
+    out = ["### Live scheduling — serialized lanes vs fused MLFQ dispatcher "
+           "(equal hardware)"]
+    out.append("| " + " | ".join(hdr) + " |")
+    out.append("|" + "---|" * len(hdr))
+    for r in rows:
+        out.append("| " + " | ".join(str(r[h]) for h in hdr) + " |")
+    out.append(f"\nfused/serialized tokens/sec: **{speedup:.2f}x**")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI (4 agents, 1 turn, 4 tokens)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero on zombie/turn regression")
+    args = ap.parse_args()
+
+    kw = dict(agents=4, turns=1, new_tokens=4, max_batch=4) if args.smoke \
+        else {}
+    rows, speedup = sched_live(seed=args.seed, **kw)
+    print(format_table(rows, speedup))
+    print("\n[sched_live] wrote BENCH_sched_live.json")
+
+    if args.check:
+        fused = next(r for r in rows if r["Method"] == "fused-mlfq")
+        expect = (4 if args.smoke else 8) * (1 if args.smoke else 2)
+        problems = []
+        if fused["zombies"] != 0:
+            problems.append(f"fused run reaped {fused['zombies']} zombies "
+                            "(must stay 0)")
+        if fused["completed_turns"] != expect:
+            problems.append(f"fused run completed {fused['completed_turns']}"
+                            f"/{expect} turns")
+        if problems:
+            raise SystemExit("; ".join(problems))
+        print("[sched_live] check passed: 0 zombies, all turns completed")
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, "src")
+    main()

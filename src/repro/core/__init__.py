@@ -6,8 +6,10 @@
   repro.core.middleware — deployable middleware facade over a model backend
 """
 from repro.core.middleware import (AgentRM, AgentRMConfig, ModelBackend,
-                                   TurnHandle, ZombieKilled)
+                                   StepReport, SteppableBackend, TurnHandle,
+                                   ZombieKilled)
 from repro.core.monitor import MonitorSnapshot, ResourceMonitor
 
-__all__ = ["AgentRM", "AgentRMConfig", "ModelBackend", "TurnHandle",
-           "ZombieKilled", "MonitorSnapshot", "ResourceMonitor"]
+__all__ = ["AgentRM", "AgentRMConfig", "ModelBackend", "StepReport",
+           "SteppableBackend", "TurnHandle", "ZombieKilled",
+           "MonitorSnapshot", "ResourceMonitor"]

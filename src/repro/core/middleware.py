@@ -5,37 +5,107 @@ Sits between the agent gateway and the model backend as a transparent layer:
     handle = agentrm.submit(agent_id, "user text")
     handle.result()        # response text
 
-Internals: MLFQ dispatcher thread + semaphore lane pool + zombie-reaper
-thread (heartbeat watchdog, probabilistic recovery, kill-after-retries) +
-token-bucket/AIMD admission + per-agent Context Lifecycle Manager + resource
-monitor. The backend contract lets real JAX engines (repro.serving) or test
-fakes plug in; heartbeats are the backend's liveness signal.
+Two dispatch modes, chosen by the backend's contract:
+
+  * **Fused (iteration-level)** — for a ``SteppableBackend`` (the paged
+    engine). ONE dispatcher loop owns the inference iteration: it pulls
+    turns from the MLFQ queues, admits them into the engine's decode batch
+    (gated on free KV blocks *and* the token bucket), and drives
+    ``backend.step()`` over the union of active sequences. MLFQ quanta are
+    **decoded tokens**: a turn that has been serviced ``quantum_for(turn)``
+    tokens while others wait is *parked in place* (pages retained, swapped
+    under pressure) and re-queued — demotion after the level's token
+    allotment, boost unchanged. The reaper condemns a stalled turn and the
+    dispatcher aborts it via ``abort_turn`` *between* steps, so batchmates
+    never see a mid-step perturbation.
+  * **Threaded (turn-level)** — the legacy path for plain ``ModelBackend``
+    backends whose ``generate`` blocks per turn: semaphore lane pool, one
+    thread per running turn, heartbeat watchdog. Kept for test fakes and
+    engines that cannot interleave (it is also the serialized baseline the
+    live scheduling benchmark measures the fused path against).
+
+Shared across both: zombie reaper (heartbeat watchdog, probabilistic
+recovery, kill-after-retries), token-bucket/AIMD admission, per-agent
+Context Lifecycle Manager, resource monitor.
 """
 from __future__ import annotations
 
-import queue
 import random
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.context.manager import ContextLifecycleManager
 from repro.core.context.message import Message
 from repro.core.monitor import ResourceMonitor
 from repro.core.scheduler.drf import DRFAccountant
-from repro.core.scheduler.policies import MLFQPolicy
+from repro.core.scheduler.policies import (TOKEN_ALLOTMENTS, TOKEN_QUANTA,
+                                           MLFQPolicy)
 from repro.core.scheduler.ratelimit import AdmissionController
 from repro.core.scheduler.task import QueueClass, Turn, TurnState
 
 
 class ModelBackend:
-    """Protocol. `generate` must call heartbeat() regularly and honour
-    cancelled (a threading.Event) promptly."""
+    """Turn-level protocol. `generate` must call heartbeat() regularly and
+    honour cancelled (a threading.Event) promptly."""
 
     def generate(self, agent_id: str, context: str, prompt: str,
                  heartbeat: Callable[[], None],
                  cancelled: threading.Event) -> str:
+        raise NotImplementedError
+
+
+@dataclass
+class StepReport:
+    """What one engine iteration did, in scheduler units."""
+    serviced: Dict[int, int] = field(default_factory=dict)  # rid -> tokens
+    finished: List[int] = field(default_factory=list)       # rids done
+    failed: List[Tuple[int, BaseException]] = field(default_factory=list)
+    # rids alive but not serviced this step (backpressured in the engine's
+    # own admit queue) — still a heartbeat: waiting is not hanging
+    waiting: List[int] = field(default_factory=list)
+
+
+class SteppableBackend:
+    """Iteration-level protocol: the fused dispatcher owns the loop and the
+    backend exposes the engine's continuous-batching session surface.
+    All methods are called from the dispatcher thread, except
+    ``hibernate_session``/``wake_session`` which may arrive from user
+    threads — implementations must lock the engine accordingly."""
+
+    def begin_turn(self, agent_id: str, context: str, prompt: str) -> int:
+        """Admit a new turn for this agent's session; returns rid."""
+        raise NotImplementedError
+
+    def session_busy(self, agent_id: str) -> bool:
+        """True while the agent's session has another in-flight turn (a
+        second turn must wait for it; the dispatcher rotates past it
+        instead of head-of-line blocking the queue)."""
+        return False
+
+    def step(self) -> StepReport:
+        """Advance every admitted sequence one iteration."""
+        raise NotImplementedError
+
+    def collect(self, rid: int) -> str:
+        """Result text of a finished turn."""
+        raise NotImplementedError
+
+    def park_turn(self, rid: int):
+        """Preempt in place; ``resume_turn`` continues bit-exactly."""
+        raise NotImplementedError
+
+    def resume_turn(self, rid: int):
+        raise NotImplementedError
+
+    def abort_turn(self, rid: int):
+        """Cancel between steps (zombie reap); session survives if retained."""
+        raise NotImplementedError
+
+    def can_admit(self, agent_id: str, prompt: str) -> bool:
+        """Admission gate: free batch slot, first-chunk KV blocks, and no
+        other in-flight turn on this agent's session."""
         raise NotImplementedError
 
 
@@ -52,6 +122,11 @@ class AgentRMConfig:
     physical_tokens: int = 100_000
     psi_inject: bool = True
     seed: int = 0
+    # fused-dispatcher MLFQ parameters (token units; see policies.token_mlfq)
+    quantum_tokens: tuple = TOKEN_QUANTA
+    allotment_tokens: tuple = TOKEN_ALLOTMENTS
+    boost_period_s: float = 25.0
+    starve_after_s: float = 45.0
 
 
 class TurnHandle:
@@ -80,26 +155,34 @@ class ZombieKilled(RuntimeError):
 class AgentRM:
     """The middleware resource manager."""
 
-    def __init__(self, backend: ModelBackend,
-                 cfg: Optional[AgentRMConfig] = None):
+    def __init__(self, backend, cfg: Optional[AgentRMConfig] = None):
         self.backend = backend
         self.cfg = cfg or AgentRMConfig()
+        self.fused = isinstance(backend, SteppableBackend)
         self.rng = random.Random(self.cfg.seed)
         self.monitor = ResourceMonitor(lanes_total=self.cfg.lanes)
         self.drf = DRFAccountant(self.cfg.lanes, self.cfg.token_rate)
-        self.policy = MLFQPolicy(drf=self.drf)
+        if self.fused:
+            self.policy = MLFQPolicy(
+                drf=self.drf, quanta=self.cfg.quantum_tokens,
+                allotments=self.cfg.allotment_tokens,
+                boost_period=self.cfg.boost_period_s,
+                starve_after=self.cfg.starve_after_s)
+        else:
+            self.policy = MLFQPolicy(drf=self.drf)
         self.admission = AdmissionController(self.cfg.token_rate,
                                              self.cfg.token_burst)
         self.clm: Dict[str, ContextLifecycleManager] = {}
         self.handles: Dict[int, TurnHandle] = {}
         self._prompts: Dict[int, str] = {}
-        self._running: Dict[int, dict] = {}
+        self._running: Dict[int, dict] = {}   # tid -> rec (holds a lane/slot)
+        self._parked: Dict[int, dict] = {}    # tid -> rec (fused: preempted)
         self._lock = threading.RLock()
         self._wake = threading.Event()
         self._stop = threading.Event()
         self._lanes = threading.Semaphore(self.cfg.lanes)
-        self._dispatcher = threading.Thread(target=self._dispatch_loop,
-                                            daemon=True)
+        loop = self._fused_loop if self.fused else self._dispatch_loop
+        self._dispatcher = threading.Thread(target=loop, daemon=True)
         self._reaper = threading.Thread(target=self._reaper_loop, daemon=True)
         self._dispatcher.start()
         self._reaper.start()
@@ -156,7 +239,220 @@ class AgentRM:
         self._stop.set()
         self._wake.set()
 
-    # --------------------------------------------------------- internals
+    # ------------------------------------------------ shared helpers
+    def _build_context(self, agent_id: str) -> str:
+        clm = self.context_for(agent_id)
+        parts = [e.text for e in clm.window()]
+        if self.cfg.psi_inject:
+            parts.append(clm.psi_message())
+        return "\n".join(parts)
+
+    def _commit_turn(self, turn: Turn, out: str):
+        """Record both sides of the turn in the agent's CLM (caller holds
+        the lock and has verified the turn was not condemned)."""
+        clm = self.context_for(turn.agent_id)
+        clm.add(Message(role="user", text=self._prompts[turn.tid],
+                        turn=clm._clock + 1))
+        clm.add(Message(role="assistant", text=out, turn=clm._clock + 1))
+        self.monitor.on_context(turn.agent_id, clm.window_tokens, clm.limit)
+
+    # ===================================================== fused dispatch
+    def _fused_loop(self):
+        """The tentpole: scheduler fused into the inference iteration.
+        Each pass = reap condemned turns -> preempt over-quantum turns ->
+        admit from MLFQ -> one ``backend.step()`` -> charge token service.
+        The engine step runs OUTSIDE the middleware lock so ``submit`` and
+        CLM calls never wait on XLA."""
+        be = self.backend
+        while not self._stop.is_set():
+            now = time.monotonic()
+            with self._lock:
+                self.policy.on_tick(now)
+                self._reap_condemned(be)
+                self._preempt_over_quantum(be, now)
+                self._admit_from_queue(be, now)
+                idle = not self._running
+            if idle:
+                self._wake.wait(timeout=0.02)
+                self._wake.clear()
+                continue
+            try:
+                report = be.step()
+            except BaseException as e:  # noqa: BLE001 — engine died
+                with self._lock:
+                    for tid, rec in list(self._running.items()):
+                        # best-effort engine-side cleanup so slots/blocks are
+                        # not leaked and future turns can still admit
+                        try:
+                            be.abort_turn(rec["rid"])
+                        except BaseException:  # noqa: BLE001
+                            pass
+                        self._finish_fused(tid, error=e)
+                continue
+            now = time.monotonic()
+            with self._lock:
+                rid_to_tid = {r["rid"]: t for t, r in self._running.items()}
+                for rid in report.waiting:
+                    tid = rid_to_tid.get(rid)
+                    if tid is not None:
+                        # backpressured inside the engine, not hanging —
+                        # don't let the reaper condemn a queued turn
+                        self._running[tid]["last_beat"] = now
+                for rid, ntok in report.serviced.items():
+                    tid = rid_to_tid.get(rid)
+                    if tid is None:
+                        continue
+                    rec = self._running[tid]
+                    rec["last_beat"] = now
+                    rec["served_run"] += ntok
+                    rec["turn"].executed += ntok
+                for rid, err in report.failed:
+                    tid = rid_to_tid.get(rid)
+                    if tid is not None:
+                        self._finish_fused(tid, error=err)
+                for rid in report.finished:
+                    tid = rid_to_tid.get(rid)
+                    if tid is None:
+                        continue
+                    rec = self._running[tid]
+                    if rec["cancelled"].is_set():
+                        self._finish_fused(tid, error=ZombieKilled(
+                            f"turn {tid} reaped"))
+                        continue
+                    try:
+                        out = be.collect(rid)
+                    except BaseException as e:  # noqa: BLE001
+                        self._finish_fused(tid, error=e)
+                        continue
+                    self._finish_fused(tid, result=out)
+
+    def _reap_condemned(self, be):
+        """Apply the reaper's verdicts between steps: ``abort_turn`` drops
+        the sequence from the batch (retained sessions survive parked)
+        without touching its batchmates."""
+        for tid, rec in list(self._running.items()):
+            if rec["cancelled"].is_set():
+                try:
+                    be.abort_turn(rec["rid"])
+                except BaseException:  # noqa: BLE001 — still fail the handle
+                    pass
+                self._finish_fused(tid, error=ZombieKilled(
+                    f"turn {tid} reaped after "
+                    f"{rec['turn'].retries} retries"))
+
+    def _preempt_over_quantum(self, be, now: float):
+        """Token-quantum preemption (work-conserving: only when someone is
+        actually waiting). The sequence is parked in place — pages stay,
+        requeue applies MLFQ demotion if its cumulative service overran the
+        level's allotment."""
+        if not len(self.policy) or len(self._running) < self.cfg.lanes:
+            # nobody waiting, or a free slot could serve the waiter without
+            # preempting anyone — parking would only cost page churn
+            return
+        for tid, rec in list(self._running.items()):
+            turn: Turn = rec["turn"]
+            if rec["served_run"] < self.policy.quantum_for(turn):
+                continue
+            try:
+                be.park_turn(rec["rid"])
+            except BaseException:  # noqa: BLE001 — leave it running
+                continue
+            del self._running[tid]
+            rec["served_run"] = 0
+            self._parked[tid] = rec
+            self.monitor.on_lane(-1)
+            self.drf.release(turn.agent_id, 1.0, turn.tokens)
+            turn.state = TurnState.QUEUED
+            turn._enq_at = now
+            self.policy.requeue(turn, now)
+
+    def _requeue_waiting(self, turn: Turn, now: float):
+        """Re-queue a turn that could not be admitted — accrue this queued
+        episode into the cumulative starvation clock first, or the boost
+        would re-age an admission-blocked turn to zero every pass."""
+        turn.queue_wait += now - getattr(turn, "_enq_at", now)
+        turn._enq_at = now
+        self.policy.requeue(turn, now)
+
+    def _admit_from_queue(self, be, now: float):
+        """Pull turns from MLFQ while the engine has capacity; gate on the
+        AIMD token bucket and on free KV blocks (head-of-line: a turn the
+        engine can't hold yet blocks its queue position). A turn whose
+        *session* is busy (its previous turn still in flight, possibly
+        parked behind it in these very queues) is rotated past instead —
+        head-of-line blocking on it could deadlock the queue until boost."""
+        tried: set = set()
+        while len(self._running) < self.cfg.lanes:
+            nxt = self.policy.dequeue(now)
+            if nxt is None:
+                return
+            prompt = self._prompts[nxt.tid]
+            resuming = nxt.tid in self._parked
+            if not resuming:
+                if be.session_busy(nxt.agent_id):
+                    self._requeue_waiting(nxt, now)
+                    if nxt.tid in tried:
+                        return          # queue cycled back — stop spinning
+                    tried.add(nxt.tid)
+                    continue
+                # a resumed turn already paid admission; only new turns are
+                # gated on engine blocks and the AIMD token bucket
+                if not be.can_admit(nxt.agent_id, prompt) \
+                        or not self.admission.admit(nxt.tokens, now):
+                    self._requeue_waiting(nxt, now)
+                    return
+            if resuming:
+                rec = self._parked.pop(nxt.tid)
+                try:
+                    be.resume_turn(rec["rid"])
+                except BaseException as e:  # noqa: BLE001
+                    try:
+                        # release the engine-side turn too, or session_busy
+                        # would stay True forever for this agent
+                        be.abort_turn(rec["rid"])
+                    except BaseException:  # noqa: BLE001
+                        pass
+                    self.handles[nxt.tid]._finish(error=e)
+                    continue
+                rec["last_beat"] = now
+            else:
+                try:
+                    rid = be.begin_turn(nxt.agent_id,
+                                        self._build_context(nxt.agent_id),
+                                        prompt)
+                except BaseException as e:  # noqa: BLE001
+                    self.handles[nxt.tid]._finish(error=e)
+                    continue
+                rec = {"turn": nxt, "rid": rid, "last_beat": now,
+                       "served_run": 0, "cancelled": threading.Event()}
+            self._running[nxt.tid] = rec
+            self.monitor.on_lane(+1)
+            self.drf.acquire(nxt.agent_id, 1.0, nxt.tokens)
+            nxt.queue_wait += now - getattr(nxt, "_enq_at", now)
+            nxt.state = TurnState.RUNNING
+            nxt.start = nxt.start or now
+            if nxt.first_wait is None:
+                nxt.first_wait = now - nxt.arrival
+            self.monitor.on_queue_depth(int(nxt.queue_class),
+                                        len(self.policy))
+
+    def _finish_fused(self, tid: int, result=None, error=None):
+        """Caller holds the lock."""
+        rec = self._running.pop(tid, None)
+        if rec is None:
+            return
+        turn: Turn = rec["turn"]
+        self.monitor.on_lane(-1)
+        self.drf.release(turn.agent_id, 1.0, turn.tokens)
+        if error is None:
+            self._commit_turn(turn, result)
+            turn.state = TurnState.DONE
+            turn.end = time.monotonic()
+        else:
+            turn.state = TurnState.FAILED
+        self.handles[tid]._finish(result=result, error=error)
+
+    # ================================================== threaded dispatch
     def _dispatch_loop(self):
         while not self._stop.is_set():
             self._wake.wait(timeout=0.05)
@@ -190,12 +486,8 @@ class AgentRM:
         turn.state = TurnState.RUNNING
         turn.start = turn.start or time.monotonic()
 
-        clm = self.context_for(turn.agent_id)
         prompt = self._prompts[turn.tid]
-        parts = [e.text for e in clm.window()]
-        if self.cfg.psi_inject:
-            parts.append(clm.psi_message())
-        context = "\n".join(parts)
+        context = self._build_context(turn.agent_id)
 
         def heartbeat():
             rec["last_beat"] = time.monotonic()
@@ -209,12 +501,7 @@ class AgentRM:
             with self._lock:
                 if cancelled.is_set():
                     raise ZombieKilled(f"turn {turn.tid} reaped")
-                clm.add(Message(role="user", text=prompt,
-                                turn=clm._clock + 1))
-                clm.add(Message(role="assistant", text=out,
-                                turn=clm._clock + 1))
-            self.monitor.on_context(turn.agent_id, clm.window_tokens,
-                                    clm.limit)
+                self._commit_turn(turn, out)
             turn.state = TurnState.DONE
             turn.end = time.monotonic()
             handle._finish(result=out)
@@ -229,7 +516,12 @@ class AgentRM:
             self._lanes.release()
             self._wake.set()
 
+    # ====================================================== zombie reaper
     def _reaper_loop(self):
+        """Shared by both modes: heartbeat-silence detection, probabilistic
+        recovery, condemnation after max_retries. In fused mode the verdict
+        is a flag — the dispatcher applies it via ``abort_turn`` between
+        engine steps; in threaded mode the worker thread observes it."""
         while not self._stop.is_set():
             time.sleep(self.cfg.reaper_period_s)
             now = time.monotonic()

@@ -1,7 +1,9 @@
 from repro.core.scheduler.drf import DRFAccountant
-from repro.core.scheduler.policies import (FIFOPolicy, MLFQPolicy, Policy,
+from repro.core.scheduler.policies import (TOKEN_ALLOTMENTS, TOKEN_QUANTA,
+                                           FIFOPolicy, MLFQPolicy, Policy,
                                            PriorityQueuePolicy,
-                                           RoundRobinPolicy, make_policy)
+                                           RoundRobinPolicy, make_policy,
+                                           token_mlfq)
 from repro.core.scheduler.ratelimit import (AdmissionController,
                                             AIMDController, TokenBucket)
 from repro.core.scheduler.scenarios import SCENARIOS, Scenario, make_turns
@@ -13,6 +15,7 @@ from repro.core.scheduler.task import (QueueClass, Turn, TurnState,
 __all__ = [
     "DRFAccountant", "FIFOPolicy", "MLFQPolicy", "Policy",
     "PriorityQueuePolicy", "RoundRobinPolicy", "make_policy",
+    "TOKEN_ALLOTMENTS", "TOKEN_QUANTA", "token_mlfq",
     "AdmissionController", "AIMDController", "TokenBucket",
     "SCENARIOS", "Scenario", "make_turns",
     "Metrics", "SimConfig", "Simulator", "run_policy",

@@ -28,6 +28,10 @@ class Policy:
         self.enqueue(turn, now)
     def dequeue(self, now: float) -> Optional[Turn]: ...
     def on_tick(self, now: float): ...
+    def quantum_for(self, turn: Turn) -> float:
+        """Service a dispatched turn may consume before the dispatcher should
+        preempt it (same unit the caller charges into ``turn.executed``)."""
+        return float("inf")
     def __len__(self) -> int: ...
 
 
@@ -104,17 +108,45 @@ class MLFQPolicy(Policy):
       share is picked first.
     * Work-conserving: lower queues are served whenever higher ones are
       empty (the dequeue scan order).
+
+    Service-unit contract: ``allotments`` and ``quanta`` are dimensionless —
+    they only have to share a unit with whatever the dispatcher charges into
+    ``turn.executed``. The simulator charges *virtual seconds*; the fused
+    live dispatcher charges *decoded tokens* (see ``token_mlfq``), so an MLFQ
+    quantum there is N tokens of engine service, not wall clock. Demotion and
+    boost are identical in both worlds: demote on requeue once ``executed``
+    exceeds the level's allotment, boost on wall-clock starvation.
     """
     name = "AgentRM-MLFQ"
     allotments = (10.0, 30.0, float("inf"))
+    quanta = (10.0, 30.0, float("inf"))
     boost_period = 25.0
     starve_after = 45.0
 
-    def __init__(self, drf: Optional[DRFAccountant] = None):
+    def __init__(self, drf: Optional[DRFAccountant] = None, *,
+                 allotments: Optional[tuple] = None,
+                 quanta: Optional[tuple] = None,
+                 boost_period: Optional[float] = None,
+                 starve_after: Optional[float] = None):
         self.queues = [deque(), deque(), deque()]
         self.drf = drf
+        if allotments is not None:
+            self.allotments = tuple(allotments)
+        if quanta is not None:
+            self.quanta = tuple(quanta)
+        if boost_period is not None:
+            self.boost_period = boost_period
+        if starve_after is not None:
+            self.starve_after = starve_after
+        assert len(self.allotments) == 3 and len(self.quanta) == 3
         self._last_boost = 0.0
         self._wait_since: dict = {}
+
+    def quantum_for(self, turn: Turn) -> float:
+        return self.quanta[self._level(turn)]
+
+    def level_of(self, turn: Turn) -> int:
+        return self._level(turn)
 
     def _level(self, turn: Turn) -> int:
         base = int(turn.queue_class)
@@ -180,6 +212,25 @@ class MLFQPolicy(Policy):
 
     def __len__(self):
         return sum(len(q) for q in self.queues)
+
+
+# Token-unit MLFQ parameters shared by the fused live dispatcher and its
+# tests: a turn may decode TOKEN_QUANTA[level] tokens per dispatch before it
+# is parked, and is demoted a level once its cumulative decoded tokens exceed
+# TOKEN_ALLOTMENTS[level]. Boost stays wall-clock (starvation is a real-time
+# phenomenon regardless of the service unit).
+TOKEN_QUANTA = (16.0, 48.0, 96.0)
+TOKEN_ALLOTMENTS = (32.0, 160.0, float("inf"))
+
+
+def token_mlfq(drf: Optional[DRFAccountant] = None, *,
+               quanta: tuple = TOKEN_QUANTA,
+               allotments: tuple = TOKEN_ALLOTMENTS,
+               boost_period: float = 25.0,
+               starve_after: float = 45.0) -> MLFQPolicy:
+    """MLFQ instance speaking the live path's token-quantum contract."""
+    return MLFQPolicy(drf=drf, allotments=allotments, quanta=quanta,
+                      boost_period=boost_period, starve_after=starve_after)
 
 
 def make_policy(name: str, drf: Optional[DRFAccountant] = None) -> Policy:

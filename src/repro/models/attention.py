@@ -165,6 +165,55 @@ def gqa_decode_paged(params, x, k_pool, v_pool, page_tables, cache_len,
     return out, (k_pool, v_pool)
 
 
+def gqa_prefill_chunk_paged(params, x, k_pool, v_pool, page_table, cache_len,
+                            valid, cfg: ModelConfig):
+    """Sarathi-style chunked prefill against a paged cache: a fixed-width
+    window of ``C`` prompt tokens for ONE sequence is processed in a single
+    call, attending causally within the chunk and fully over the sequence's
+    already-written pages.
+
+    x: (1, C, d) chunk embeddings; k_pool/v_pool: (num_blocks, blk, hkv, hd)
+    one layer's pool slice; page_table: (npages,) int32 block ids in position
+    order (null-padded); cache_len: scalar int32 tokens already resident
+    *before* this chunk; valid: scalar int32 — how many of the C positions
+    are real (the tail of a prompt rarely fills the chunk width; padding
+    rows write to the reserved null block 0 and are masked out of
+    attention, so one traced shape serves every chunk).
+    """
+    b, C, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    blk = k_pool.shape[1]
+    npages = page_table.shape[0]
+    cache_len = jnp.asarray(cache_len)
+    valid = jnp.asarray(valid)
+    pos = cache_len + jnp.arange(C)
+    q = (x @ params["wq"]).reshape(b, C, hq, hd)
+    k = (x @ params["wk"]).reshape(b, C, hkv, hd)
+    v = (x @ params["wv"]).reshape(b, C, hkv, hd)
+    if cfg.rotary_pct > 0:
+        rot = int(hd * cfg.rotary_pct)
+        cos, sin = rope_tables(pos, rot, cfg.rope_theta)
+        q = apply_rope(q, cos, sin, cfg.rotary_pct)
+        k = apply_rope(k, cos, sin, cfg.rotary_pct)
+    # scatter the chunk's K/V into the sequence's blocks; padding positions
+    # (and any position past the table) land in null block 0
+    live = jnp.arange(C) < valid
+    page_idx = jnp.clip(pos // blk, 0, npages - 1)
+    bids = jnp.where(live, page_table[page_idx], 0)
+    offs = pos % blk
+    k_pool = k_pool.at[bids, offs].set(k[0].astype(k_pool.dtype))
+    v_pool = v_pool.at[bids, offs].set(v[0].astype(v_pool.dtype))
+    from repro.kernels.paged_attention.ref import gather_pages
+    kg = gather_pages(k_pool, page_table[None]).astype(q.dtype)
+    vg = gather_pages(v_pool, page_table[None]).astype(q.dtype)
+    pairing = "g_major" if cfg.gqa_mode == "tiled" else "kv_major"
+    o = simple_attention(q, kg, vg, causal=True, q_offset=cache_len,
+                         kv_len=cache_len + valid,
+                         f32_inputs=cfg.attn_f32_inputs, pairing=pairing)
+    out = o.reshape(b, C, hq * hd) @ params["wo"]
+    return out, (k_pool, v_pool)
+
+
 def gqa_decode_ring(params, x, cache_k, cache_v, cache_len, cfg: ModelConfig):
     """Sliding-window decode against a ring-buffer cache (zamba2 long ctx).
 

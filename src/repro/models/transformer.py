@@ -315,6 +315,33 @@ def decode_step_paged(params, pools: Dict, token, cache_len, page_tables,
     return _unembed(params, x, cfg), {"k": k, "v": v}
 
 
+def prefill_chunk_paged(params, pools: Dict, tokens, cache_len, valid,
+                        page_table, cfg: ModelConfig):
+    """Chunked prefill for one sequence over the paged pools (Sarathi-style
+    admission: a long prompt enters the batch ``C`` tokens per engine step
+    instead of blocking it). tokens: (1, C) int32 (null-padded to the fixed
+    chunk width), cache_len/valid: scalar int32, page_table: (npages,) int32.
+    Returns (logits (1, C, V) f32 — caller reads position ``valid - 1``,
+    updated pools). The chunk's K/V is written into the sequence's pages, so
+    after the call the cache holds positions [0, cache_len + valid)."""
+    params = cast_floats(params, cfg.compute_dtype)
+    x = _embed(params, tokens, cfg)
+
+    def body(h, xs):
+        lp, kp, vp = xs
+        hh = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        a, (kp, vp) = attn_mod.gqa_prefill_chunk_paged(
+            lp["attn"], hh, kp, vp, page_table, cache_len, valid, cfg)
+        h = h + a
+        m, _, _ = _mlp_or_moe(lp, h, cfg)
+        return h + m, (kp, vp)
+
+    x, (k, v) = jax.lax.scan(body, x, (params["layers"], pools["k"],
+                                       pools["v"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _unembed(params, x, cfg), {"k": k, "v": v}
+
+
 def prefill(params, batch, cfg: ModelConfig, state: Optional[Dict] = None,
             max_len: Optional[int] = None):
     """Full-sequence prefill; returns (last-position logits, filled state).

@@ -1,11 +1,13 @@
 from repro.serving.backend import (EngineBackend, PagedEngineBackend,
-                                   byte_tokenize)
+                                   SerializedPagedBackend, byte_tokenize)
 from repro.serving.engine import InferenceEngine, Request
-from repro.serving.paging import (BlockAllocator, OutOfBlocksError, PageTable,
+from repro.serving.paging import (BlockAllocator, EngineError,
+                                  OutOfBlocksError, PageTable,
                                   PagedInferenceEngine, PagedKVCache,
                                   PagedRequest, SwapManager)
 
-__all__ = ["EngineBackend", "PagedEngineBackend", "byte_tokenize",
-           "InferenceEngine", "Request", "BlockAllocator",
-           "OutOfBlocksError", "PageTable", "PagedInferenceEngine",
-           "PagedKVCache", "PagedRequest", "SwapManager"]
+__all__ = ["EngineBackend", "PagedEngineBackend", "SerializedPagedBackend",
+           "byte_tokenize", "InferenceEngine", "Request", "BlockAllocator",
+           "EngineError", "OutOfBlocksError", "PageTable",
+           "PagedInferenceEngine", "PagedKVCache", "PagedRequest",
+           "SwapManager"]

@@ -1,6 +1,20 @@
-"""JAX engine adapter for the AgentRM middleware: turns (context, prompt)
-text into token streams through the InferenceEngine, emitting heartbeats per
-decode step so the zombie reaper can watch real liveness.
+"""JAX engine adapters for the AgentRM middleware.
+
+``PagedEngineBackend`` is the production adapter: it implements the
+middleware's **iteration-level** ``SteppableBackend`` contract (submit/poll
+sessions, one ``step()`` over the whole decode batch) so the fused MLFQ
+dispatcher — not a thread pool — owns the inference loop. One retained paged
+session per agent: first turn prefills (chunked), later turns ``extend`` the
+session, preemption parks it in place, hibernation swaps its pages.
+
+``SerializedPagedBackend`` is the same engine behind the legacy turn-level
+``generate`` contract: a backend-wide lock held for the whole decode loop,
+so turns serialize through an engine built for continuous batching. It
+exists as the *baseline* the live scheduling benchmark measures the fused
+dispatcher against (and as the reference for the old reap-mid-decode
+semantics).
+
+``EngineBackend`` adapts the dense slot engine the same turn-level way.
 """
 from __future__ import annotations
 
@@ -9,8 +23,13 @@ from typing import Callable
 
 import numpy as np
 
-from repro.core.middleware import ModelBackend, ZombieKilled
+from repro.core.middleware import (ModelBackend, StepReport,
+                                   SteppableBackend, ZombieKilled)
 from repro.serving.engine import InferenceEngine
+from repro.serving.paging.engine import EngineError
+
+__all__ = ["byte_tokenize", "EngineBackend", "EngineError",
+           "PagedEngineBackend", "SerializedPagedBackend"]
 
 
 def byte_tokenize(text: str, vocab: int, max_len: int = 96) -> np.ndarray:
@@ -18,17 +37,114 @@ def byte_tokenize(text: str, vocab: int, max_len: int = 96) -> np.ndarray:
     return (toks[:max_len].astype(np.int32) % max(vocab - 2, 2)) + 1
 
 
-class PagedEngineBackend(ModelBackend):
-    """Persistent-session backend over the paged engine: one retained paged
-    session per agent. First turn prefills; later turns ``extend`` the
-    session (teacher-forced prompt tokens reuse the cached history), so a
-    turn's KV cost is O(new tokens), not O(whole transcript).
+class PagedEngineBackend(SteppableBackend):
+    """Session surface of the paged engine for the fused dispatcher.
 
-    Implements the middleware's hibernation contract: CLM tier transitions
-    call ``hibernate_session``/``wake_session`` and the session's pages move
-    to/from the host-RAM swap tier — O(live pages) instead of the dense
-    engine's O(max_len) ``extract_slot`` copy.
+    All engine access is serialized by a backend lock — the dispatcher
+    thread drives ``step``/``begin_turn``/``park_turn``/..., while
+    ``hibernate_session``/``wake_session`` may arrive from user threads
+    (CLM tier transitions). Lock order is middleware-lock -> engine-lock,
+    never the reverse.
     """
+
+    PROMPT_TOKENS = 48
+
+    def __init__(self, engine, max_new_tokens: int = 12):
+        self.engine = engine
+        self.max_new_tokens = max_new_tokens
+        self.sessions: dict = {}            # agent_id -> rid
+        self._lock = threading.Lock()
+
+    def _tokenize(self, prompt: str) -> np.ndarray:
+        return byte_tokenize(prompt, self.engine.cfg.vocab_size,
+                             max_len=self.PROMPT_TOKENS)
+
+    # --------------------------------------------- SteppableBackend
+    def begin_turn(self, agent_id: str, context: str, prompt: str) -> int:
+        toks = self._tokenize(prompt)
+        with self._lock:
+            rid = self.sessions.get(agent_id)
+            if rid is None or rid not in self.engine.reqs:
+                rid = self.engine.submit(toks, self.max_new_tokens,
+                                         retain=True)
+                self.sessions[agent_id] = rid
+            else:
+                self.engine.extend(rid, toks, self.max_new_tokens)
+            return rid
+
+    def step(self) -> StepReport:
+        with self._lock:
+            try:
+                fins = self.engine.step()
+            except Exception as e:
+                raise EngineError(f"paged engine step failed: {e}") from e
+            return StepReport(
+                serviced=dict(self.engine.last_serviced),
+                finished=[r.rid for r in fins],
+                failed=[(rid, EngineError(msg))
+                        for rid, msg in self.engine.last_failures],
+                waiting=[r.rid for r in self.engine._queue])
+
+    def collect(self, rid: int) -> str:
+        with self._lock:
+            req = self.engine.reqs.get(rid)
+            if req is None or not req.done:
+                raise EngineError(f"rid {rid} has no finished turn to collect")
+            return "tok:" + ",".join(str(t) for t in req.out_tokens)
+
+    def park_turn(self, rid: int):
+        with self._lock:
+            self.engine.park(rid)
+
+    def resume_turn(self, rid: int):
+        with self._lock:
+            self.engine.resume(rid)
+
+    def abort_turn(self, rid: int):
+        with self._lock:
+            self.engine.abort_turn(rid)
+
+    def session_busy(self, agent_id: str) -> bool:
+        """One in-flight turn per session: a second turn for the same agent
+        waits (rotated by the dispatcher) until the first parks it."""
+        with self._lock:
+            rid = self.sessions.get(agent_id)
+            if rid is None or rid not in self.engine.reqs:
+                return False
+            req = self.engine.reqs[rid]
+            return req.state not in ("parked", "swapped") or not req.done
+
+    def can_admit(self, agent_id: str, prompt: str) -> bool:
+        with self._lock:
+            n = min(len(prompt.encode("utf-8", "ignore")),
+                    self.PROMPT_TOKENS)
+            return self.engine.can_admit(max(n, 1))
+
+    # ------------------------------------------- hibernation contract
+    def hibernate_session(self, agent_id: str):
+        with self._lock:
+            rid = self.sessions.get(agent_id)
+            if rid is None or rid not in self.engine.reqs:
+                return
+            req = self.engine.reqs[rid]
+            if req.state == "active" or not req.done:
+                # never rip a mid-turn sequence out from under the fused
+                # dispatcher — the CLM tier transition waits for the park
+                return
+            self.engine.hibernate(rid)
+
+    def wake_session(self, agent_id: str):
+        with self._lock:
+            rid = self.sessions.get(agent_id)
+            if rid is not None:
+                self.engine.wake(rid)
+
+
+class SerializedPagedBackend(ModelBackend):
+    """The pre-fusion design, kept as the benchmark baseline: persistent
+    paged sessions, but ``generate`` holds a backend-wide lock for the whole
+    decode loop — one turn decodes at a time no matter how wide the engine's
+    batch is. The middleware runs it on the threaded lane pool."""
 
     def __init__(self, engine, max_new_tokens: int = 12):
         self.engine = engine
@@ -42,7 +158,7 @@ class PagedEngineBackend(ModelBackend):
         toks = byte_tokenize(prompt, self.engine.cfg.vocab_size, max_len=48)
         with self._lock:
             rid = self.sessions.get(agent_id)
-            if rid is None:
+            if rid is None or rid not in self.engine.reqs:
                 rid = self.engine.submit(toks, self.max_new_tokens,
                                          retain=True)
                 self.sessions[agent_id] = rid
@@ -67,7 +183,11 @@ class PagedEngineBackend(ModelBackend):
                 if rid not in self.engine.reqs:
                     self.sessions.pop(agent_id, None)
                 raise
-        assert out is not None, "paged engine failed to finish turn"
+            if out is None:
+                self.engine.abort_turn(rid)
+                raise EngineError(
+                    f"paged engine failed to finish turn for {agent_id} "
+                    f"(rid {rid})")
         return "tok:" + ",".join(str(t) for t in out.out_tokens)
 
     # ------------------------------------------- hibernation contract
@@ -85,9 +205,9 @@ class PagedEngineBackend(ModelBackend):
 
 
 class EngineBackend(ModelBackend):
-    """Serialises middleware turns through a shared engine instance. One
-    decode step per heartbeat: a stall in XLA shows up as heartbeat silence,
-    which is exactly what the reaper watches."""
+    """Serialises middleware turns through a shared dense engine instance.
+    One decode step per heartbeat: a stall in XLA shows up as heartbeat
+    silence, which is exactly what the reaper watches."""
 
     def __init__(self, engine: InferenceEngine, max_new_tokens: int = 12):
         self.engine = engine
@@ -111,5 +231,7 @@ class EngineBackend(ModelBackend):
                         out = fin
                 if out is not None:
                     break
-        assert out is not None, "engine failed to finish request"
+        if out is None:
+            raise EngineError(f"dense engine failed to finish request "
+                              f"for {agent_id} (rid {rid})")
         return "tok:" + ",".join(str(t) for t in out.out_tokens)

@@ -8,11 +8,23 @@ Differences from the dense ``repro.serving.engine.InferenceEngine``:
     longer reserve ``max_len`` of cache each, so the summed live context
     can far exceed what slot-granularity admission could hold at equal
     memory.
+  * Prefill is **chunked** (Sarathi-style): a prompt enters the decode
+    batch immediately and is written ``prefill_chunk`` tokens per step
+    while its batchmates keep decoding — a long prompt never stalls the
+    batch, and admission only needs blocks for the first chunk. New-turn
+    prompt tokens on a retained session (``extend``) ride the same path,
+    so multi-turn extension costs O(plen / chunk) steps, not O(plen).
   * Sessions are first-class. A finished request may be *retained*
     (parked): its pages stay resident and evictable, and a later turn
-    ``extend``s it — new prompt tokens are teacher-forced through the
-    decode path, reusing the cached history. ``fork`` shares a session's
-    pages copy-on-write (prefix sharing across agent sessions).
+    ``extend``s it. ``fork`` shares a session's pages copy-on-write, and
+    block-aligned prompt prefixes are deduplicated across sessions through
+    the same refcount machinery (``PagedKVCache.adopt_prefix``).
+  * Scheduling hooks: ``park`` preempts an ACTIVE sequence in place (slot
+    freed, pages retained — or swapped under pressure) and ``resume``
+    re-admits it to continue **bit-exactly**; ``abort_turn`` cancels an
+    in-flight turn between steps without disturbing batchmates. These are
+    what the fused MLFQ dispatcher in ``repro.core.middleware`` calls at
+    token-quantum boundaries.
   * Hibernation is O(live pages): ``hibernate`` swaps a session's pages to
     the host-RAM ``KVSwapStore`` tier; ``wake`` rebinds them to fresh
     blocks (ids may differ, bytes are identical, decode continues
@@ -41,23 +53,39 @@ QUEUED, ACTIVE, PARKED, SWAPPED, FREED = \
     "queued", "active", "parked", "swapped", "freed"
 
 
-@dataclasses.dataclass
+class EngineError(RuntimeError):
+    """Typed engine failure: raised (or reported) instead of asserting so
+    the middleware can propagate it through ``TurnHandle.result()``."""
+
+
+@dataclasses.dataclass(eq=False)
 class PagedRequest:
     rid: int
     prompt: np.ndarray                       # (S,) int32
     max_new_tokens: int = 16
     retain: bool = False
     out_tokens: List[int] = dataclasses.field(default_factory=list)
-    forced: List[int] = dataclasses.field(default_factory=list)
+    # input tokens not yet written to the cache: the whole prompt for a
+    # fresh request, [previous last_tok] + new prompt tokens for an extend.
+    pending: List[int] = dataclasses.field(default_factory=list)
     slot: Optional[int] = None
     table: Optional[PageTable] = None
-    last_tok: int = 0
+    last_tok: int = 0                        # next input token once pending=[]
     state: str = QUEUED
     done: bool = False                       # current turn finished
+    # True only while the ORIGINAL prompt is being written (first turn,
+    # never extended): the prefix-dedup index may only be fed from this
+    # window — extend turns write non-prompt tokens at positions that a
+    # prompt-keyed index entry would misdescribe.
+    fresh_turn: bool = True
 
     @property
     def num_tokens(self) -> int:
         return self.table.num_tokens if self.table is not None else 0
+
+    @property
+    def prefilling(self) -> bool:
+        return bool(self.pending)
 
 
 class PagedInferenceEngine:
@@ -66,7 +94,8 @@ class PagedInferenceEngine:
 
     def __init__(self, cfg: ModelConfig, params, *, num_blocks: int = 64,
                  block_size: int = 16, max_batch: int = 8,
-                 max_len: int = 256, swap_store: Optional[KVSwapStore] = None):
+                 max_len: int = 256, prefill_chunk: int = 32,
+                 swap_store: Optional[KVSwapStore] = None):
         assert cfg.family in ("dense", "moe", "vlm"), \
             "paged engine targets the decoder-only GQA family"
         self.cfg = cfg
@@ -74,6 +103,7 @@ class PagedInferenceEngine:
         self.params = params
         self.max_batch = max_batch
         self.max_len = min(max_len, (num_blocks - 1) * block_size)
+        self.prefill_chunk = max(1, min(prefill_chunk, self.max_len))
         self.cache = PagedKVCache(cfg, num_blocks, block_size)
         self.swap = SwapManager(self.cache, swap_store,
                                 on_evict=self._on_evicted)
@@ -85,19 +115,20 @@ class PagedInferenceEngine:
         self._queue: List[PagedRequest] = []
         self._next_rid = 0
         self.decode_steps = 0
+        self.last_serviced: Dict[int, int] = {}   # rid -> tokens, last step
+        # per-step casualty list: sequences the pool could not grow even
+        # after reclaim (rid, reason) — aborted individually so one
+        # sequence's memory pressure never takes down its batchmates
+        self.last_failures: List[tuple] = []
 
-        self._prefill = jax.jit(self._prefill_impl)
         self._decode = jax.jit(
             lambda params, pools, tok, lens, tables:
             tr.decode_step_paged(params, pools, tok, lens, tables, cfg),
             donate_argnums=(1,))
-
-    # ---------------------------------------------------------- prefill
-    def _prefill_impl(self, params, tokens):
-        state = self.model.init_decode_state(1, tokens.shape[1])
-        logits, state = tr.prefill(params, {"tokens": tokens}, self.cfg,
-                                   state=state, max_len=tokens.shape[1])
-        return logits, state
+        self._chunk = jax.jit(
+            lambda params, pools, toks, n, t, table:
+            tr.prefill_chunk_paged(params, pools, toks, n, t, table, cfg),
+            donate_argnums=(1,))
 
     # ----------------------------------------------------------- public
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
@@ -106,29 +137,33 @@ class PagedInferenceEngine:
         self._next_rid += 1
         req = PagedRequest(rid, np.asarray(prompt, np.int32),
                            max_new_tokens=max_new_tokens, retain=retain)
+        req.pending = [int(t) for t in req.prompt]
+        assert len(req.pending) < self.max_len, "prompt longer than max_len"
         self.reqs[rid] = req
         self._queue.append(req)
         return rid
 
     def extend(self, rid: int, tokens: np.ndarray,
                max_new_tokens: int = 16) -> int:
-        """Start a new turn on a retained session: the new prompt tokens are
-        teacher-forced through the paged decode path (their KV lands in the
-        session's pages), then generation continues as usual."""
+        """Start a new turn on a retained session: the previous turn's final
+        token plus the new prompt tokens are chunk-prefilled into the
+        session's pages (their KV lands next to the cached history), then
+        generation continues as usual."""
         req = self.reqs[rid]
         assert req.state in (PARKED, SWAPPED), \
             f"extend needs a parked/swapped session, rid {rid} is {req.state}"
-        forced = [int(t) for t in np.asarray(tokens).reshape(-1)]
+        new = [int(t) for t in np.asarray(tokens).reshape(-1)]
         held = (req.num_tokens if req.state != SWAPPED
                 else self.swap.store.peek(rid)[2])
-        if held + len(forced) + 1 > self.max_len:
+        if held + len(new) + 1 > self.max_len:
             raise ValueError(
                 f"extend overflows max_len: session rid {rid} holds {held} "
-                f"tokens, {len(forced)} more won't fit in {self.max_len}")
-        req.forced = forced
+                f"tokens, {len(new)} more won't fit in {self.max_len}")
+        req.pending = [req.last_tok] + new
         req.max_new_tokens = max_new_tokens
         req.out_tokens = []
         req.done = False
+        req.fresh_turn = False       # cache positions now diverge from prompt
         self._queue.append(req)
         return rid
 
@@ -148,6 +183,33 @@ class PagedInferenceEngine:
         self.swap.mark_cold(rid, req.table)
         self.swap.mark_cold(nrid, clone.table)
         return nrid
+
+    # ------------------------------------------------- preemption hooks
+    def park(self, rid: int):
+        """Preempt an ACTIVE sequence *in place*: its decode slot is
+        released but its pages (and any half-consumed pending prefill) stay
+        exactly as they are, so ``resume`` continues bit-identically. A
+        parked sequence is an eviction candidate — under block pressure it
+        may be swapped to host RAM, which changes its block ids but not a
+        byte of its state."""
+        req = self.reqs[rid]
+        assert req.state == ACTIVE, \
+            f"park needs an ACTIVE sequence, rid {rid} is {req.state}"
+        self.active.pop(rid)
+        self.free_slots.append(req.slot)
+        req.slot = None
+        req.state = PARKED
+        self.swap.mark_cold(rid, req.table)
+
+    def resume(self, rid: int):
+        """Re-queue a parked/swapped mid-turn sequence for admission; it
+        picks up the same turn where ``park`` left it."""
+        req = self.reqs[rid]
+        assert req.state in (PARKED, SWAPPED), \
+            f"resume needs a parked/swapped sequence, rid {rid} is {req.state}"
+        assert not req.done, f"rid {rid} has no in-flight turn to resume"
+        if not any(r is req for r in self._queue):
+            self._queue.append(req)
 
     # ------------------------------------------------------ hibernation
     def _on_evicted(self, rid: int):
@@ -184,8 +246,7 @@ class PagedInferenceEngine:
         """Drop a session entirely, in any state (frees its decode slot,
         queue entry, device blocks, or host pages)."""
         req = self.reqs.pop(rid)
-        if req in self._queue:
-            self._queue.remove(req)
+        self._queue = [r for r in self._queue if r is not req]
         if req.state == ACTIVE:
             self.active.pop(rid, None)
             self.free_slots.append(req.slot)
@@ -199,15 +260,20 @@ class PagedInferenceEngine:
         req.state = FREED
 
     def abort_turn(self, rid: int):
-        """Cancel an in-flight turn (zombie reap): pending prompt tokens and
-        generation are dropped; a retained session survives parked, anything
-        else is freed — so the next turn can ``extend`` normally."""
+        """Cancel an in-flight turn (zombie reap): un-written prompt tokens
+        and generation are dropped *between steps*, so batchmates never see
+        a mid-step perturbation. A retained session survives parked (its
+        next ``extend`` continues from whatever was written); anything else
+        is freed."""
         req = self.reqs.get(rid)
         if req is None:
             return
-        if req in self._queue:
-            self._queue.remove(req)
-        req.forced = []
+        self._queue = [r for r in self._queue if r is not req]
+        if req.pending:
+            # keep the "last_tok = next input token" invariant: everything
+            # before pending[0] is in the cache, pending[0] is not
+            req.last_tok = req.pending[0]
+            req.pending = []
         req.done = True
         if req.state == ACTIVE:
             self.active.pop(rid, None)
@@ -221,15 +287,38 @@ class PagedInferenceEngine:
                 req.table = None
                 req.state = FREED
                 self.reqs.pop(rid, None)
-        elif req.state == QUEUED:            # fresh, never prefilled
+        elif req.state == QUEUED:            # fresh, never admitted
             req.state = FREED
             self.reqs.pop(rid, None)
-        # PARKED / SWAPPED sessions just lose the un-admitted turn
+        elif req.state in (PARKED, SWAPPED) and not req.retain:
+            self.release(rid)                # a parked one-shot: nothing left
+        # retained PARKED / SWAPPED sessions just lose the un-admitted turn
 
     # ------------------------------------------------------------ admit
+    def can_admit(self, n_prompt_tokens: int) -> bool:
+        """Would a fresh prompt of this length get a slot and first-chunk
+        blocks right now (counting cold pages the swap tier could reclaim)?
+        The fused dispatcher gates MLFQ dequeue on this, so turns are only
+        pulled when the engine can actually take them."""
+        if len(self.free_slots) <= len(self._queue):
+            return False
+        need = self.cache.pages_for(min(n_prompt_tokens, self.prefill_chunk))
+        return need <= self.cache.allocator.num_free + self.swap.cold_pages()
+
     def _ensure_blocks(self, n: int):
         if self.cache.allocator.num_free < n:
             self.swap.reclaim(n)
+
+    def _ensure_capacity(self, req: PagedRequest, n_tokens: int):
+        """ensure_capacity with demand paging: reclaim cold sessions when
+        the pool can't grow this sequence (the +1 covers a possible
+        copy-on-write of a shared tail block)."""
+        try:
+            self.cache.ensure_capacity(req.table, n_tokens)
+        except OutOfBlocksError:
+            need = self.cache.pages_for(n_tokens) - req.table.num_pages + 1
+            self.swap.reclaim(max(need, 1))
+            self.cache.ensure_capacity(req.table, n_tokens)
 
     def _admit(self):
         while self._queue and self.free_slots:
@@ -248,21 +337,25 @@ class PagedInferenceEngine:
             self.swap.touch(req.rid)
 
     def _admit_fresh(self, req: PagedRequest):
+        """Admission costs blocks for the *first chunk only* (minus any
+        indexed prompt prefix adopted from another session); later chunks
+        allocate as they land."""
         plen = len(req.prompt)
-        assert plen < self.max_len, "prompt longer than max_len"
-        self._ensure_blocks(self.cache.pages_for(plen))
-        pt = self.cache.alloc_table(plen)
+        toks = [int(t) for t in req.prompt]
+        shared = self.cache.adopt_prefix(toks)
+        n_shared = len(shared) * self.cache.block_size
+        first = min(plen - n_shared, self.prefill_chunk)
+        pt = PageTable(self.cache.block_size, shared, n_shared)
         try:
-            logits, pstate = self._prefill(
-                self.params, jnp.asarray(req.prompt)[None, :plen])
-        except BaseException:
-            self.cache.free_table(pt)
+            need = self.cache.pages_for(n_shared + first) - len(shared)
+            self._ensure_blocks(need)
+            self.cache.ensure_capacity(pt, n_shared + first)
+        except OutOfBlocksError:
+            for bid in pt.blocks:
+                self.cache._release_block(bid)
             raise
-        self.cache.write_prefill(pt, pstate["k"][:, 0], pstate["v"][:, 0])
         req.table = pt
-        tok = int(jnp.argmax(logits[0, -1]))
-        req.out_tokens.append(tok)
-        req.last_tok = tok
+        req.pending = toks[n_shared:]
 
     def _admit_resume(self, req: PagedRequest):
         if req.state == SWAPPED:
@@ -271,65 +364,105 @@ class PagedInferenceEngine:
 
     # ------------------------------------------------------------- step
     def step(self) -> List[PagedRequest]:
-        """Advance every active sequence one token; returns requests whose
-        turn finished this step."""
+        """Advance the batch one iteration: every prefilling sequence takes
+        one prompt chunk, every decoding sequence one token. Returns
+        requests whose turn finished this step; per-rid service counts (in
+        tokens) land in ``last_serviced``."""
         self._admit()
+        self.last_serviced = {}
+        self.last_failures = []
         if not self.active:
             return []
-        # make every append safe: grow tables / copy-on-write shared tails,
-        # swapping out cold sessions when the pool is under pressure
-        for req in self.active.values():
+        finished: List[PagedRequest] = []
+        decoding = [r for r in self.active.values() if not r.prefilling]
+        prefilling = [r for r in self.active.values() if r.prefilling]
+
+        def grown(req, n_tokens):
+            """Per-sequence OOM isolation: if the pool cannot grow this
+            sequence even after reclaim, abort IT (retained -> parked,
+            turn lost) and let its batchmates proceed untouched."""
             try:
-                self.cache.ensure_capacity(req.table, req.num_tokens + 1)
-            except OutOfBlocksError:
-                self.swap.reclaim(1)
-                self.cache.ensure_capacity(req.table, req.num_tokens + 1)
+                self._ensure_capacity(req, n_tokens)
+                return True
+            except OutOfBlocksError as e:
+                self.last_failures.append((req.rid, str(e)))
+                self.abort_turn(req.rid)
+                return False
 
-        lens = np.zeros((self.max_batch,), np.int32)
-        tables = np.full((self.max_batch, self.max_pages), NULL_BLOCK,
-                         np.int32)
-        toks = np.zeros((self.max_batch, 1), np.int32)
-        for req in self.active.values():
-            lens[req.slot] = req.num_tokens
-            row = req.table.padded(self.max_pages)
-            tables[req.slot] = row
-            toks[req.slot, 0] = req.last_tok
+        # ---- chunked prefill: one block of prompt per sequence per step
+        for req in prefilling:
+            T = min(self.prefill_chunk, len(req.pending))
+            n = req.num_tokens
+            if not grown(req, n + T):
+                continue
+            buf = np.zeros((1, self.prefill_chunk), np.int32)
+            buf[0, :T] = req.pending[:T]
+            row = np.asarray(req.table.padded(self.max_pages), np.int32)
+            logits, pools = self._chunk(
+                self.params, self.cache.pools(), jnp.asarray(buf),
+                jnp.int32(n), jnp.int32(T), jnp.asarray(row))
+            self.cache.set_pools(pools)
+            req.table.num_tokens = n + T
+            del req.pending[:T]
+            if req.fresh_turn:
+                # only the original prompt's write window may feed the
+                # dedup index — extend turns write non-prompt tokens
+                self.cache.register_prefix(req.prompt, req.table,
+                                           req.num_tokens)
+            self.last_serviced[req.rid] = T
+            if not req.pending:
+                tok = int(jnp.argmax(logits[0, T - 1]))
+                req.out_tokens.append(tok)
+                req.last_tok = tok
+                if (len(req.out_tokens) >= req.max_new_tokens
+                        or req.num_tokens >= self.max_len - 1):
+                    finished.append(req)
+                    self._retire(req)
 
-        logits, pools = self._decode(
-            self.params, self.cache.pools(), jnp.asarray(toks),
-            jnp.asarray(lens), jnp.asarray(tables))
-        self.cache.set_pools(pools)
-        self.decode_steps += 1
-
-        out = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
-        finished = []
-        for rid, req in list(self.active.items()):
-            req.table.num_tokens += 1
-            if req.forced:
-                # teacher-forcing a new turn's prompt: ignore the model's
-                # prediction, feed the next prompt token instead
-                req.last_tok = req.forced.pop(0)
-            else:
+        # ---- decode: one token for every sequence past prefill
+        decoding = [r for r in decoding if grown(r, r.num_tokens + 1)]
+        if decoding:
+            lens = np.zeros((self.max_batch,), np.int32)
+            tables = np.full((self.max_batch, self.max_pages), NULL_BLOCK,
+                             np.int32)
+            toks = np.zeros((self.max_batch, 1), np.int32)
+            for req in decoding:
+                lens[req.slot] = req.num_tokens
+                tables[req.slot] = req.table.padded(self.max_pages)
+                toks[req.slot, 0] = req.last_tok
+            logits, pools = self._decode(
+                self.params, self.cache.pools(), jnp.asarray(toks),
+                jnp.asarray(lens), jnp.asarray(tables))
+            self.cache.set_pools(pools)
+            self.decode_steps += 1
+            out = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+            for req in decoding:
+                req.table.num_tokens += 1
                 tok = int(out[req.slot])
                 req.out_tokens.append(tok)
                 req.last_tok = tok
-            if ((not req.forced
-                 and len(req.out_tokens) >= req.max_new_tokens)
-                    or req.num_tokens >= self.max_len - 1):
-                req.done = True
-                finished.append(req)
-                self.free_slots.append(req.slot)
-                req.slot = None
-                del self.active[rid]
-                if req.retain:
-                    req.state = PARKED
-                    self.swap.mark_cold(rid, req.table)
-                else:
-                    self.cache.free_table(req.table)
-                    req.table = None
-                    req.state = FREED
-                    self.reqs.pop(rid, None)
+                self.last_serviced[req.rid] = \
+                    self.last_serviced.get(req.rid, 0) + 1
+                if (len(req.out_tokens) >= req.max_new_tokens
+                        or req.num_tokens >= self.max_len - 1):
+                    finished.append(req)
+                    self._retire(req)
         return finished
+
+    def _retire(self, req: PagedRequest):
+        """Turn complete: park a retained session, free everything else."""
+        req.done = True
+        self.free_slots.append(req.slot)
+        req.slot = None
+        del self.active[req.rid]
+        if req.retain:
+            req.state = PARKED
+            self.swap.mark_cold(req.rid, req.table)
+        else:
+            self.cache.free_table(req.table)
+            req.table = None
+            req.state = FREED
+            self.reqs.pop(req.rid, None)
 
     def run_to_completion(self, max_steps: int = 512) -> List[PagedRequest]:
         done: List[PagedRequest] = []
@@ -351,5 +484,6 @@ class PagedInferenceEngine:
             "kv_bytes_total": self.cache.bytes_total,
             "kv_bytes_in_use": self.cache.bytes_in_use,
             "live_context_tokens": live,
+            **self.cache.prefix_stats(),
             **self.swap.stats(),
         }

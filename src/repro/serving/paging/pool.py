@@ -6,10 +6,24 @@ sequence maps its token positions for the whole stack. This is the layer
 that owns the bytes: the BlockAllocator decides *which* block, this class
 moves data — prefill scatter, copy-on-write duplication, and the host<->
 device page transfers the swap tier is built on.
+
+Two extras over a plain pool:
+
+  * Bulk writes (``write_prefill``/``scatter``) run under ``jax.jit`` with
+    the pool buffers donated, so swap-in and prefill update the pool
+    in place instead of re-materialising the full ``(L, num_blocks, ...)``
+    arrays outside jit per call. Block-id rows are padded to power-of-two
+    widths (padding aimed at the null block) to bound retraces.
+  * A prompt-prefix index: full, block-aligned prompt prefixes are hashed
+    across sessions, so a new session whose prompt starts with an indexed
+    prefix *adopts* those blocks through the existing refcount/COW
+    machinery instead of recomputing and rewriting them (vLLM-style
+    automatic prefix caching). Dedup counters feed ``kv_stats``.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from functools import partial
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +31,25 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as tr
-from repro.serving.paging.allocator import BlockAllocator, PageTable
+from repro.serving.paging.allocator import NULL_BLOCK, BlockAllocator, PageTable
+
+
+@partial(jax.jit, donate_argnums=(0, 1))
+def _pool_put(k, v, bids, k_pages, v_pages):
+    """Scatter page-shaped updates into donated pools.
+
+    k/v: (L, nb, blk, hkv, hd); bids: (P,) int32 (NULL_BLOCK-padded);
+    k_pages/v_pages: (L, P, blk, hkv, hd) with zeros in padding rows — the
+    padding writes land in the reserved null block, which exists exactly to
+    absorb masked writes."""
+    return k.at[:, bids].set(k_pages), v.at[:, bids].set(v_pages)
+
+
+def _pow2_pad(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
 
 
 class PagedKVCache:
@@ -33,6 +65,17 @@ class PagedKVCache:
         self.allocator = BlockAllocator(num_blocks)
         L, _, blk, hkv, hd = self.k.shape
         self.block_bytes = 2 * L * blk * hkv * hd * self.k.dtype.itemsize
+        # ---- prompt-prefix dedup index -----------------------------------
+        # key = the raw bytes of a block-aligned prompt prefix; value = the
+        # block id holding that prefix's *last* block. Entries are dropped
+        # the moment their block's refcount reaches zero, so a hit is always
+        # a live block.
+        self._prefix_index: Dict[bytes, int] = {}
+        self._prefix_of: Dict[int, bytes] = {}
+        self.prefix_lookups = 0
+        self.prefix_hits = 0
+        self.prompt_blocks_shared = 0
+        self.prompt_blocks_fresh = 0
 
     # ------------------------------------------------------------- pools
     def pools(self) -> Dict:
@@ -61,7 +104,8 @@ class PagedKVCache:
         return PageTable(self.block_size, blocks, 0)
 
     def free_table(self, pt: PageTable):
-        self.allocator.release_many(pt.blocks)
+        for bid in pt.blocks:
+            self._release_block(bid)
         pt.blocks = []
         pt.num_tokens = 0
 
@@ -72,6 +116,64 @@ class PagedKVCache:
         for bid in pt.blocks:
             self.allocator.share(bid)
         return PageTable(pt.block_size, list(pt.blocks), pt.num_tokens)
+
+    def _release_block(self, bid: int):
+        """Drop one reference; purge the prefix index if the block died."""
+        if self.allocator.release(bid):
+            key = self._prefix_of.pop(bid, None)
+            if key is not None:
+                self._prefix_index.pop(key, None)
+
+    # -------------------------------------------------- prefix dedup
+    def adopt_prefix(self, tokens) -> List[int]:
+        """Longest indexed block-aligned *strict* prefix of ``tokens``:
+        returns the block ids (refcounts already bumped) so the caller can
+        seed a page table with them and skip recomputing their KV. Capped at
+        ``len(tokens) - 1`` positions — the final prompt token is always
+        recomputed, because its logits are what seed generation."""
+        self.prefix_lookups += 1
+        toks = np.ascontiguousarray(np.asarray(tokens, np.int32).reshape(-1))
+        shared: List[int] = []
+        k = 1
+        while k * self.block_size <= len(toks) - 1:
+            bid = self._prefix_index.get(toks[: k * self.block_size].tobytes())
+            if bid is None:
+                break
+            self.allocator.share(bid)
+            shared.append(bid)
+            k += 1
+        eligible = max(0, (len(toks) - 1) // self.block_size)
+        self.prompt_blocks_shared += len(shared)
+        self.prompt_blocks_fresh += eligible - len(shared)
+        if shared:
+            self.prefix_hits += 1
+        return shared
+
+    def register_prefix(self, tokens, pt: PageTable, upto_tokens: int):
+        """Index ``pt``'s full blocks whose contents are exactly the first
+        ``upto_tokens`` positions of ``tokens`` (prompt-only blocks; call as
+        prefill chunks land). Idempotent; first writer wins."""
+        toks = np.ascontiguousarray(np.asarray(tokens, np.int32).reshape(-1))
+        n = min(int(upto_tokens), len(toks))
+        for k in range(1, n // self.block_size + 1):
+            bid = pt.blocks[k - 1]
+            if bid in self._prefix_of:
+                continue
+            key = toks[: k * self.block_size].tobytes()
+            if key not in self._prefix_index:
+                self._prefix_index[key] = bid
+                self._prefix_of[bid] = key
+
+    def prefix_stats(self) -> Dict[str, float]:
+        shared, fresh = self.prompt_blocks_shared, self.prompt_blocks_fresh
+        return {
+            "prefix_lookups": self.prefix_lookups,
+            "prefix_hits": self.prefix_hits,
+            "prefix_hit_rate": self.prefix_hits / max(1, self.prefix_lookups),
+            "prefix_blocks_indexed": len(self._prefix_index),
+            "blocks_deduped": shared,
+            "dedup_ratio": shared / max(1, shared + fresh),
+        }
 
     # ------------------------------------------------------ write paths
     def ensure_capacity(self, pt: PageTable, n_tokens: int):
@@ -91,27 +193,43 @@ class PagedKVCache:
         new = self.allocator.alloc()
         self.k = self.k.at[:, new].set(self.k[:, bid])
         self.v = self.v.at[:, new].set(self.v[:, bid])
-        self.allocator.release(bid)
+        self._release_block(bid)
         pt.blocks[page_idx] = new
+
+    def _put_pages(self, bids: np.ndarray, k_pages, v_pages):
+        """Jitted, donated bulk page write: pad the page axis to a power of
+        two (padding rows -> null block, zero data) and scatter."""
+        pages = len(bids)
+        width = _pow2_pad(max(pages, 1))
+        row = np.full((width,), NULL_BLOCK, np.int32)
+        row[:pages] = bids
+        if width != pages:
+            pad = [(0, 0), (0, width - pages)] + \
+                [(0, 0)] * (k_pages.ndim - 2)
+            k_pages = jnp.pad(k_pages, pad)
+            v_pages = jnp.pad(v_pages, pad)
+        self.k, self.v = _pool_put(
+            self.k, self.v, jnp.asarray(row),
+            jnp.asarray(k_pages, self.k.dtype),
+            jnp.asarray(v_pages, self.v.dtype))
 
     def write_prefill(self, pt: PageTable, k_pre, v_pre):
         """Scatter prefill KV (L, plen, hkv, hd) into the sequence's blocks
-        in one batched update (the last partial page is zero-padded)."""
+        in one batched, jitted update (the last partial page is zero-padded,
+        the pool buffers are donated)."""
         L, plen = k_pre.shape[0], k_pre.shape[1]
         self.ensure_capacity(pt, plen)
         pages = self.pages_for(plen)
         pad = pages * self.block_size - plen
         bids = np.asarray(pt.blocks[:pages], np.int32)
 
-        def put(pool, pre):
-            pre = pre.astype(pool.dtype)
+        def paged(pre):
+            pre = jnp.asarray(pre)
             if pad:
                 pre = jnp.pad(pre, ((0, 0), (0, pad), (0, 0), (0, 0)))
-            pre = pre.reshape(L, pages, self.block_size, *pre.shape[2:])
-            return pool.at[:, bids].set(pre)
+            return pre.reshape(L, pages, self.block_size, *pre.shape[2:])
 
-        self.k = put(self.k, k_pre)
-        self.v = put(self.v, v_pre)
+        self._put_pages(bids, paged(k_pre), paged(v_pre))
         pt.num_tokens = plen
 
     # ------------------------------------------------- swap (host pages)
@@ -123,10 +241,9 @@ class PagedKVCache:
 
     def scatter(self, k_pages: np.ndarray, v_pages: np.ndarray,
                 num_tokens: int) -> PageTable:
-        """Rebind host pages to freshly allocated device blocks (swap-in)."""
+        """Rebind host pages to freshly allocated device blocks (swap-in),
+        through the same donated jit write as prefill."""
         pages = k_pages.shape[1]
         blocks = self.allocator.alloc_many(pages)
-        bids = np.asarray(blocks, np.int32)
-        self.k = self.k.at[:, bids].set(jnp.asarray(k_pages, self.k.dtype))
-        self.v = self.v.at[:, bids].set(jnp.asarray(v_pages, self.v.dtype))
+        self._put_pages(np.asarray(blocks, np.int32), k_pages, v_pages)
         return PageTable(self.block_size, blocks, num_tokens)

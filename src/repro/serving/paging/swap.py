@@ -47,6 +47,11 @@ class SwapManager:
     def is_resident(self, key) -> bool:
         return key not in self.store
 
+    def cold_pages(self) -> int:
+        """Device pages currently held by evictable (cold) sequences — the
+        amount ``reclaim`` could free without touching hot state."""
+        return sum(pt.num_pages for pt in self._cold.values())
+
     # ------------------------------------------------------------- moves
     def swap_out(self, key, pt: PageTable) -> int:
         """Device -> host: copy live pages out, free the device blocks.

@@ -116,6 +116,37 @@ def _paged(cfg, params, **kw):
     return PagedInferenceEngine(cfg, params, **kw)
 
 
+def test_pool_write_prefill_and_scatter_roundtrip(setup):
+    """The jitted, donated bulk write paths: write_prefill scatters prefill
+    KV into blocks (partial last page zero-padded) and gather returns the
+    exact bytes; scatter rebinds host pages to fresh blocks identically."""
+    from repro.serving.paging.pool import PagedKVCache
+    cfg, params = setup
+    cache = PagedKVCache(cfg, num_blocks=9, block_size=8)
+    L, _, blk, hkv, hd = cache.k.shape
+    plen = 13                                    # 2 pages, partial last
+    rng = np.random.default_rng(3)
+    k_pre = rng.standard_normal((L, plen, hkv, hd)).astype(np.float32)
+    v_pre = rng.standard_normal((L, plen, hkv, hd)).astype(np.float32)
+    pt = cache.alloc_table(plen)
+    cache.write_prefill(pt, k_pre, v_pre)
+    assert pt.num_tokens == plen
+    kg, vg = cache.gather(pt)
+    flat_k = kg.reshape(L, -1, hkv, hd)[:, :plen]
+    want = np.asarray(jnp.asarray(k_pre, cache.k.dtype))  # pool precision
+    np.testing.assert_array_equal(flat_k, want)
+    assert (kg.reshape(L, -1, hkv, hd)[:, plen:] == 0).all()  # padded tail
+    # swap-style roundtrip: host pages -> fresh device blocks, same bytes
+    pt2 = cache.scatter(kg, vg, plen)
+    assert pt2.blocks != pt.blocks or len(pt2.blocks) == 0
+    kg2, vg2 = cache.gather(pt2)
+    np.testing.assert_array_equal(kg, kg2)
+    np.testing.assert_array_equal(vg, vg2)
+    cache.free_table(pt)
+    cache.free_table(pt2)
+    assert cache.allocator.num_used == 0
+
+
 def test_paged_engine_matches_dense_engine(setup):
     """Block-granular serving realises the same model: greedy decode through
     paged attention produces the dense engine's exact tokens."""
@@ -234,7 +265,8 @@ def test_reclaim_swaps_cold_sessions_under_pressure(setup):
     eng.run_to_completion()
     assert eng.reqs[r1].state == "parked"
     # 3 pages held by r1, 8 total; this grows to 6 pages -> must evict r1
-    r2 = eng.submit(np.arange(40) % 50, max_new_tokens=4)
+    # (offset prompt: a shared prefix would be deduped and dodge the pressure)
+    r2 = eng.submit((np.arange(40) + 7) % 50, max_new_tokens=4)
     eng.run_to_completion()
     assert eng.swap.stats()["swaps_out"] >= 1
     assert eng.reqs[r1].state == "swapped"
@@ -292,15 +324,47 @@ def test_release_and_abort_in_any_state(setup):
     assert len(eng.swap.store) == 0 and eng.cache.allocator.num_used == 0
 
 
-def test_backend_reap_leaves_session_extendable(setup):
-    """A ZombieKilled mid-turn must not wedge the agent's retained session
-    (the next turn extends it normally)."""
-    import threading
-    from repro.core.middleware import ZombieKilled
+def test_backend_abort_leaves_session_extendable(setup):
+    """An aborted turn (zombie reap) must not wedge the agent's retained
+    session — the next turn extends it normally (fused session API)."""
     from repro.serving import PagedEngineBackend
     cfg, params = setup
     eng = _paged(cfg, params, num_blocks=33, max_batch=2)
     be = PagedEngineBackend(eng, max_new_tokens=3)
+    rid = be.begin_turn("a", "", "hello")
+    while rid not in [f for f in _drain(be)]:
+        pass
+    out1 = be.collect(rid)
+    assert out1.startswith("tok:")
+    # second turn reaped mid-decode: abort between steps
+    rid2 = be.begin_turn("a", "", "again")
+    be.step()
+    be.abort_turn(rid2)
+    assert eng.reqs[be.sessions["a"]].state == "parked"
+    rid3 = be.begin_turn("a", "", "once more")
+    while rid3 not in [f for f in _drain(be)]:
+        pass
+    assert be.collect(rid3).startswith("tok:")
+    # a fresh agent aborted before admission is fully dropped
+    rid4 = be.begin_turn("b", "", "hi")
+    be.abort_turn(rid4)
+    assert rid4 not in eng.reqs
+
+
+def _drain(be):
+    return be.step().finished
+
+
+def test_serialized_backend_reap_and_engine_error(setup):
+    """The legacy lock-per-turn baseline keeps the old reap contract, and a
+    turn the engine cannot finish raises a typed EngineError (not a bare
+    assert in a daemon thread)."""
+    import threading
+    from repro.core.middleware import ZombieKilled
+    from repro.serving import EngineError, SerializedPagedBackend
+    cfg, params = setup
+    eng = _paged(cfg, params, num_blocks=33, max_batch=2)
+    be = SerializedPagedBackend(eng, max_new_tokens=3)
     ok = threading.Event()           # never set
     dead = threading.Event()
     dead.set()
@@ -315,6 +379,13 @@ def test_backend_reap_leaves_session_extendable(setup):
     with pytest.raises(ZombieKilled):
         be.generate("b", "", "hi", lambda: None, dead)
     assert "b" not in be.sessions
+    # a stepping engine that never finishes the turn -> typed error
+    eng.step, real = (lambda: []), eng.step
+    try:
+        with pytest.raises(EngineError, match="failed to finish turn"):
+            be.generate("a", "", "stuck", lambda: None, ok)
+    finally:
+        eng.step = real
 
 
 def test_middleware_hibernates_paged_sessions(setup):
