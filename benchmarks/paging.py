@@ -8,7 +8,10 @@ Reports, per engine:
   * concurrent_seqs    — max sequences decoding at once
   * hib_bytes          — bytes one session hibernation moves
                          (dense: O(max_len) slot copy; paged: O(live pages))
-  * decode_ms          — mean wall-clock per decode step (post-warmup)
+  * decode_ms          — mean wall-clock per decode step (post-warmup;
+                         timed regions end on block_until_ready)
+  * jit_dispatches_per_step — jitted model calls per work-doing iteration
+                         (paged megastep: 1.0)
   * swap_bytes_moved   — total swap traffic (paged only)
 
 Emits ``BENCH_paging.json`` next to the repo root.
@@ -36,11 +39,14 @@ def _tree_bytes(tree) -> int:
 
 
 def _timed_drain(engine, max_steps=400) -> Tuple[float, int, int]:
-    """Run to completion; returns (mean s/step, steps, peak live tokens)."""
+    """Run to completion; returns (mean s/step, steps, peak live tokens).
+    Each timed step ends on ``engine.sync()`` (block_until_ready over the
+    engine's device state) so async dispatch cannot flatter the clock."""
     times, peak = [], 0
     for _ in range(max_steps):
         t0 = time.perf_counter()
         engine.step()
+        engine.sync()
         times.append(time.perf_counter() - t0)
         if hasattr(engine, "kv_stats"):
             peak = max(peak, engine.kv_stats()["live_context_tokens"])
@@ -101,6 +107,7 @@ def paging(seed: int = 0):
         "hib_bytes": dense_hib,
         "decode_ms": round(1e3 * sum(step_s) / len(step_s), 2),
         "steps": steps,
+        "jit_dispatches_per_step": round(dense.jit_dispatches_per_step, 2),
         "swap_bytes_moved": 0,
     }
 
@@ -139,6 +146,7 @@ def paging(seed: int = 0):
         "hib_bytes": hib_bytes,
         "decode_ms": round(1e3 * sum(step_s) / len(step_s), 2),
         "steps": steps,
+        "jit_dispatches_per_step": round(paged.jit_dispatches_per_step, 2),
         "swap_bytes_moved": st["swap_bytes_out"] + st["swap_bytes_in"],
     }
 
@@ -155,7 +163,8 @@ def paging(seed: int = 0):
 
 def format_table(name: str, rows: List[dict]) -> str:
     hdr = ["Method", "kv_bytes_reserved", "peak_live_tokens",
-           "concurrent_seqs", "hib_bytes", "decode_ms", "swap_bytes_moved"]
+           "concurrent_seqs", "hib_bytes", "decode_ms",
+           "jit_dispatches_per_step", "swap_bytes_moved"]
     out = [f"### Paged KV cache — {name} scenario "
            "(equal device KV byte budget)"]
     out.append("| " + " | ".join(hdr) + " |")

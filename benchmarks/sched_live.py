@@ -1,26 +1,41 @@
 """Live scheduling benchmark: serialized lanes vs the fused MLFQ dispatcher
-at equal hardware.
+vs the megastep engine, at equal hardware.
 
-Both runs drive the SAME paged engine configuration (same model, same block
+All runs drive the SAME paged engine configuration (same model, same block
 pool, same ``max_batch``) through the AgentRM middleware with a multi-agent,
-multi-turn workload. The only difference is who owns the inference loop:
+multi-turn workload of mixed prefill/decode traffic (prompts span several
+prefill chunks, so chunk prefill and decode interleave every round). What
+changes is who owns the inference loop and how many jitted dispatches one
+iteration costs:
 
   * ``serialized-lanes`` — the pre-fusion design: thread-per-lane dispatch
     over ``SerializedPagedBackend``, whose ``generate`` holds a backend-wide
     lock for the whole decode loop. Turns serialize through an engine built
     for continuous batching; the decode batch never holds more than one
     live sequence.
-  * ``fused-mlfq`` — the iteration-level design: one dispatcher loop admits
-    turns from the MLFQ queues into the engine's decode batch and steps the
-    union, with token quanta, in-place preemption and between-step reaping.
+  * ``fused-mlfq`` — the PR 2 iteration-level design: one dispatcher loop
+    admits turns from the MLFQ queues into the engine's decode batch and
+    steps the union — but each engine iteration still costs
+    ``1 + n_prefilling`` jitted dispatches (one ``_chunk`` call per
+    prefilling sequence plus the batched decode), with full (B, vocab)
+    logits crossing to host.
+  * ``fused-megastep`` — this PR: decode rows and prefill chunks fused into
+    ONE jitted dispatch per iteration (Sarathi batch fusion over the paged
+    pools, greedy sampling inside the jit, a single (B,) int32 vector
+    crossing to host).
+
+Timed regions end with ``engine.sync()`` (``jax.block_until_ready`` over
+the KV pools) so async dispatch cannot flatter wall-clock numbers.
 
 Reports per mode: wall seconds, decoded tokens/sec, engine decode steps,
-zombies (must be 0), completed turns. Emits ``BENCH_sched_live.json``.
+``jit_dispatches_per_step`` (must be 1.0 under the megastep), zombies (must
+be 0), completed turns. Emits ``BENCH_sched_live.json``.
 
     PYTHONPATH=src python -m benchmarks.sched_live [--smoke] [--check]
 
-``--check`` exits non-zero if the fused run reaped any zombies or failed a
-turn — the CI smoke gate.
+``--check`` exits non-zero if any fused run reaped a zombie, failed a turn,
+or the megastep run dispatched more than one jit call per step — the CI
+smoke gate.
 """
 from __future__ import annotations
 
@@ -36,18 +51,20 @@ def _count_tokens(outs: List[str]) -> int:
     return sum(len(o.split(",")) for o in outs if o.startswith("tok:"))
 
 
-def _drive(rm, agents: int, turns: int, timeout: float = 600.0):
+def _drive(rm, eng, agents: int, turns: int, timeout: float = 600.0):
     """Submit `turns` rounds of one turn per agent (round n+1 extends the
     sessions round n parked); returns (wall_s, tokens, completed)."""
-    # uncounted warmup turn: pays the jit compiles (chunk prefill + decode)
-    # so both modes are measured steady-state, like the paging benchmark
-    rm.submit("warmup", "compile everything once").result(timeout)
+    # uncounted warmup turn: pays the jit compiles (megastep shape buckets /
+    # chunk prefill + decode) so all modes are measured steady-state
+    rm.submit("warmup", "compile everything once, please").result(timeout)
     outs: List[str] = []
     t0 = time.perf_counter()
     for turn in range(turns):
-        handles = [rm.submit(f"agent{i}", f"turn {turn} for agent {i}")
+        handles = [rm.submit(f"agent{i}",
+                             f"this is turn {turn} for agent {i} — " * 3)
                    for i in range(agents)]
         outs += [h.result(timeout) for h in handles]
+    eng.sync()            # don't let async dispatch flatter the clock
     wall = time.perf_counter() - t0
     return wall, _count_tokens(outs), len(outs)
 
@@ -68,24 +85,29 @@ def sched_live(seed: int = 0, *, agents: int = 8, turns: int = 2,
     model = build(cfg)
     params = model.init_params(jax.random.PRNGKey(seed))
 
-    def make_engine():
+    def make_engine(megastep: bool):
+        # max_len fits two 48-token prompts + generations per session (the
+        # mixed-traffic prompts span 3 prefill chunks each)
         return PagedInferenceEngine(
             cfg, params, num_blocks=num_blocks, block_size=block_size,
-            max_batch=max_batch, max_len=96, prefill_chunk=prefill_chunk)
+            max_batch=max_batch, max_len=192, prefill_chunk=prefill_chunk,
+            megastep=megastep)
 
     def make_rm(backend):
-        # generous detect_after: neither mode should reap healthy turns that
+        # generous detect_after: no mode should reap healthy turns that
         # are merely queued behind the backend lock / the decode batch
         return AgentRM(backend, AgentRMConfig(
             lanes=max_batch, detect_after_s=300.0, seed=seed))
 
+    modes = (("serialized-lanes", SerializedPagedBackend, False),
+             ("fused-mlfq", PagedEngineBackend, False),
+             ("fused-megastep", PagedEngineBackend, True))
     rows = []
-    for mode, backend_cls in (("serialized-lanes", SerializedPagedBackend),
-                              ("fused-mlfq", PagedEngineBackend)):
-        eng = make_engine()
+    for mode, backend_cls, megastep in modes:
+        eng = make_engine(megastep)
         rm = make_rm(backend_cls(eng, max_new_tokens=new_tokens))
         try:
-            wall, tokens, completed = _drive(rm, agents, turns)
+            wall, tokens, completed = _drive(rm, eng, agents, turns)
             snap = rm.monitor.snapshot()
             rows.append({
                 "Method": mode,
@@ -93,6 +115,8 @@ def sched_live(seed: int = 0, *, agents: int = 8, turns: int = 2,
                 "tokens": tokens,
                 "tokens_per_s": round(tokens / wall, 2),
                 "decode_steps": eng.decode_steps,
+                "jit_dispatches_per_step":
+                    round(eng.jit_dispatches_per_step, 2),
                 "completed_turns": completed,
                 "zombies": snap.zombies_reaped,
                 "recoveries": snap.recoveries,
@@ -102,7 +126,9 @@ def sched_live(seed: int = 0, *, agents: int = 8, turns: int = 2,
 
     serial = next(r for r in rows if r["Method"] == "serialized-lanes")
     fused = next(r for r in rows if r["Method"] == "fused-mlfq")
+    mega = next(r for r in rows if r["Method"] == "fused-megastep")
     speedup = fused["tokens_per_s"] / max(serial["tokens_per_s"], 1e-9)
+    mega_speedup = mega["tokens_per_s"] / max(fused["tokens_per_s"], 1e-9)
     payload = {
         "config": {"agents": agents, "turns": turns, "max_batch": max_batch,
                    "new_tokens": new_tokens, "num_blocks": num_blocks,
@@ -110,22 +136,26 @@ def sched_live(seed: int = 0, *, agents: int = 8, turns: int = 2,
                    "seed": seed},
         "rows": rows,
         "fused_speedup_tokens_per_s": round(speedup, 2),
+        "megastep_speedup_tokens_per_s": round(mega_speedup, 2),
     }
     with open("BENCH_sched_live.json", "w") as f:
         json.dump(payload, f, indent=2)
-    return rows, speedup
+    return rows, speedup, mega_speedup
 
 
-def format_table(rows: List[dict], speedup: float) -> str:
+def format_table(rows: List[dict], speedup: float,
+                 mega_speedup: float) -> str:
     hdr = ["Method", "wall_s", "tokens", "tokens_per_s", "decode_steps",
-           "completed_turns", "zombies", "recoveries"]
-    out = ["### Live scheduling — serialized lanes vs fused MLFQ dispatcher "
-           "(equal hardware)"]
+           "jit_dispatches_per_step", "completed_turns", "zombies",
+           "recoveries"]
+    out = ["### Live scheduling — serialized lanes vs fused MLFQ vs "
+           "megastep (equal hardware)"]
     out.append("| " + " | ".join(hdr) + " |")
     out.append("|" + "---|" * len(hdr))
     for r in rows:
         out.append("| " + " | ".join(str(r[h]) for h in hdr) + " |")
-    out.append(f"\nfused/serialized tokens/sec: **{speedup:.2f}x**")
+    out.append(f"\nfused/serialized tokens/sec: **{speedup:.2f}x**; "
+               f"megastep/fused tokens/sec: **{mega_speedup:.2f}x**")
     return "\n".join(out)
 
 
@@ -135,28 +165,35 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes for CI (4 agents, 1 turn, 4 tokens)")
     ap.add_argument("--check", action="store_true",
-                    help="exit non-zero on zombie/turn regression")
+                    help="exit non-zero on zombie/turn/dispatch regression")
     args = ap.parse_args()
 
     kw = dict(agents=4, turns=1, new_tokens=4, max_batch=4) if args.smoke \
         else {}
-    rows, speedup = sched_live(seed=args.seed, **kw)
-    print(format_table(rows, speedup))
+    rows, speedup, mega_speedup = sched_live(seed=args.seed, **kw)
+    print(format_table(rows, speedup, mega_speedup))
     print("\n[sched_live] wrote BENCH_sched_live.json")
 
     if args.check:
-        fused = next(r for r in rows if r["Method"] == "fused-mlfq")
         expect = (4 if args.smoke else 8) * (1 if args.smoke else 2)
         problems = []
-        if fused["zombies"] != 0:
-            problems.append(f"fused run reaped {fused['zombies']} zombies "
-                            "(must stay 0)")
-        if fused["completed_turns"] != expect:
-            problems.append(f"fused run completed {fused['completed_turns']}"
-                            f"/{expect} turns")
+        for name in ("fused-mlfq", "fused-megastep"):
+            r = next(x for x in rows if x["Method"] == name)
+            if r["zombies"] != 0:
+                problems.append(f"{name} run reaped {r['zombies']} zombies "
+                                "(must stay 0)")
+            if r["completed_turns"] != expect:
+                problems.append(f"{name} run completed "
+                                f"{r['completed_turns']}/{expect} turns")
+        mega = next(x for x in rows if x["Method"] == "fused-megastep")
+        if mega["jit_dispatches_per_step"] != 1.0:
+            problems.append(
+                f"megastep dispatched {mega['jit_dispatches_per_step']} "
+                "jit calls per step (must be exactly 1)")
         if problems:
             raise SystemExit("; ".join(problems))
-        print("[sched_live] check passed: 0 zombies, all turns completed")
+        print("[sched_live] check passed: 0 zombies, all turns completed, "
+              "megastep at 1 jit dispatch per step")
 
 
 if __name__ == "__main__":

@@ -1,11 +1,14 @@
-"""Public wrapper for paged decode attention: model layout (b, 1, hq, d)
-queries against the pooled block cache (num_blocks, blk, hkv, d) + per-
-sequence page tables. The pool layout is the allocator's native layout, so
-no transpose or gather of the cache happens on the hot path — the kernel's
-index maps do the page walk."""
+"""Public wrappers for paged attention: model-layout queries against the
+pooled block cache (num_blocks, blk, hkv, d) + per-sequence page tables. The
+pool layout is the allocator's native layout, so no transpose or gather of
+the cache happens on the hot path — the kernel's index maps do the page
+walk. ``paged_attention`` is the decode (one query token) form;
+``paged_prefill_attention`` is the chunked-prefill form the megastep uses
+(decode rows are its C == 1 special case)."""
 from __future__ import annotations
 
-from repro.kernels.paged_attention.kernel import paged_attention_bhd
+from repro.kernels.paged_attention.kernel import (paged_attention_bhd,
+                                                  paged_prefill_attention_bcd)
 
 
 def paged_attention(q, k_pool, v_pool, lens, page_tables, *, scale=None,
@@ -17,3 +20,14 @@ def paged_attention(q, k_pool, v_pool, lens, page_tables, *, scale=None,
     o = paged_attention_bhd(q[:, 0], k_pool, v_pool, lens, page_tables,
                             scale=scale, interpret=interpret)
     return o.reshape(b, 1, hq, -1)
+
+
+def paged_prefill_attention(q, k_pool, v_pool, cache_lens, valids,
+                            page_tables, *, scale=None,
+                            interpret: bool = False):
+    """q: (b, C, hq, d) mixed prefill/decode rows (see the kernel docstring);
+    cache_lens/valids: (b,) int32; page_tables: (b, npages) int32.
+    Returns (b, C, hq, dv)."""
+    return paged_prefill_attention_bcd(q, k_pool, v_pool, cache_lens, valids,
+                                       page_tables, scale=scale,
+                                       interpret=interpret)

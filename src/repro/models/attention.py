@@ -214,6 +214,60 @@ def gqa_prefill_chunk_paged(params, x, k_pool, v_pool, page_table, cache_len,
     return out, (k_pool, v_pool)
 
 
+def gqa_mixed_step_paged(params, x, k_pool, v_pool, page_tables, cache_lens,
+                         valids, cfg: ModelConfig, *, interpret: bool = False):
+    """One fused Sarathi megastep row set: every row of the fixed
+    ``(B, C)`` batch is a prefill chunk — decode rows simply carry
+    ``valids == 1`` — so ONE call writes every row's K/V into its pages and
+    attends causally over chunk + resident history.
+
+    x: (B, C, d) embeddings (token padding beyond ``valids`` is garbage the
+    caller discards); k_pool/v_pool: (num_blocks, blk, hkv, hd) one layer's
+    pool slice; page_tables: (B, npages) int32, null-padded; cache_lens:
+    (B,) int32 tokens resident *before* this step; valids: (B,) int32 real
+    tokens per row (0 = inactive slot; its writes land in the null block and
+    its outputs are discarded). Per-row isolation is the page table itself:
+    a row only reads/writes its own blocks, so batching rows into one
+    dispatch cannot change any row's math.
+    """
+    b, C, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    blk = k_pool.shape[1]
+    npages = page_tables.shape[1]
+    cache_lens = jnp.asarray(cache_lens)
+    valids = jnp.asarray(valids)
+    pos = cache_lens[:, None] + jnp.arange(C)[None, :]        # (B, C)
+    q = (x @ params["wq"]).reshape(b, C, hq, hd)
+    k = (x @ params["wk"]).reshape(b, C, hkv, hd)
+    v = (x @ params["wv"]).reshape(b, C, hkv, hd)
+    if cfg.rotary_pct > 0:
+        rot = int(hd * cfg.rotary_pct)
+        cos, sin = rope_tables(pos, rot, cfg.rope_theta)
+        q = apply_rope(q, cos, sin, cfg.rotary_pct)
+        k = apply_rope(k, cos, sin, cfg.rotary_pct)
+    # scatter every row's chunk into its own blocks; padding positions (and
+    # inactive rows) aim at the reserved null block 0
+    live = jnp.arange(C)[None, :] < valids[:, None]
+    page_idx = jnp.clip(pos // blk, 0, npages - 1)
+    bids = jnp.where(live, jnp.take_along_axis(page_tables, page_idx, axis=1),
+                     0)
+    offs = pos % blk
+    k_pool = k_pool.at[bids, offs].set(k.astype(k_pool.dtype))
+    v_pool = v_pool.at[bids, offs].set(v.astype(v_pool.dtype))
+    if cfg.use_pallas:
+        from repro.kernels.paged_attention import ops as pa
+        o = pa.paged_prefill_attention(q, k_pool, v_pool, cache_lens, valids,
+                                       page_tables, interpret=interpret)
+    else:
+        from repro.kernels.paged_attention.ref import \
+            paged_prefill_attention_ref
+        pairing = "g_major" if cfg.gqa_mode == "tiled" else "kv_major"
+        o = paged_prefill_attention_ref(q, k_pool, v_pool, cache_lens,
+                                        valids, page_tables, pairing=pairing)
+    out = o.reshape(b, C, hq * hd) @ params["wo"]
+    return out, (k_pool, v_pool)
+
+
 def gqa_decode_ring(params, x, cache_k, cache_v, cache_len, cfg: ModelConfig):
     """Sliding-window decode against a ring-buffer cache (zamba2 long ctx).
 

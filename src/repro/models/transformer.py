@@ -342,6 +342,42 @@ def prefill_chunk_paged(params, pools: Dict, tokens, cache_len, valid,
     return _unembed(params, x, cfg), {"k": k, "v": v}
 
 
+def mixed_step_paged(params, pools: Dict, tokens, cache_lens, valids,
+                     page_tables, cfg: ModelConfig):
+    """The megastep forward: ONE jitted call advances the whole mixed batch
+    one engine iteration — decode rows are width-1 prefill rows (Sarathi
+    batch fusion over the paged pools).
+
+    tokens: (B, C) int32 — row b carries ``valids[b]`` real tokens (decode:
+    the last sampled token at column 0; prefill: the next prompt chunk),
+    null-padded to the fixed chunk width; cache_lens/valids: (B,) int32;
+    page_tables: (B, npages) int32, null-padded. Greedy sampling happens
+    INSIDE the jit: only the last valid position of each row is unembedded
+    and argmaxed, so a single (B,) int32 vector crosses to host per step
+    instead of (B, vocab) logits. Returns (next_token_ids (B,) int32,
+    updated pools). Inactive rows (valids == 0) produce garbage ids the
+    caller ignores; their K/V writes land in the reserved null block."""
+    params = cast_floats(params, cfg.compute_dtype)
+    x = _embed(params, tokens, cfg)
+
+    def body(h, xs):
+        lp, kp, vp = xs
+        hh = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        a, (kp, vp) = attn_mod.gqa_mixed_step_paged(
+            lp["attn"], hh, kp, vp, page_tables, cache_lens, valids, cfg)
+        h = h + a
+        m, _, _ = _mlp_or_moe(lp, h, cfg)
+        return h + m, (kp, vp)
+
+    x, (k, v) = jax.lax.scan(body, x, (params["layers"], pools["k"],
+                                       pools["v"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    rows = jnp.arange(x.shape[0])
+    last = jnp.clip(jnp.asarray(valids) - 1, 0, x.shape[1] - 1)
+    logits = _unembed(params, x[rows, last], cfg)    # (B, V) — last valid pos
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), {"k": k, "v": v}
+
+
 def prefill(params, batch, cfg: ModelConfig, state: Optional[Dict] = None,
             max_len: Optional[int] = None):
     """Full-sequence prefill; returns (last-position logits, filled state).

@@ -5,7 +5,11 @@ middleware's **iteration-level** ``SteppableBackend`` contract (submit/poll
 sessions, one ``step()`` over the whole decode batch) so the fused MLFQ
 dispatcher — not a thread pool — owns the inference loop. One retained paged
 session per agent: first turn prefills (chunked), later turns ``extend`` the
-session, preemption parks it in place, hibernation swaps its pages.
+session, preemption parks it in place, hibernation swaps its pages. Under
+the engine's megastep an iteration is ONE jitted dispatch, so the whole
+``StepReport`` — per-rid token service for MLFQ charging, finished turns,
+per-sequence OOM casualties — is accounted from a single model call per
+scheduling pass.
 
 ``SerializedPagedBackend`` is the same engine behind the legacy turn-level
 ``generate`` contract: a backend-wide lock held for the whole decode loop,

@@ -53,6 +53,10 @@ class InferenceEngine:
         self._next_rid = 0
         self._queue: List[Request] = []
         self._last_tok = jnp.zeros((max_slots, 1), jnp.int32)
+        # dispatch accounting (same contract as the paged engine): jitted
+        # model calls vs step()s that ran any — benchmarks report the ratio
+        self.jit_dispatches = 0
+        self.steps_dispatched = 0
 
         # jit'd single-sequence prefill returning per-layer kv
         self._prefill = jax.jit(self._prefill_impl)
@@ -83,6 +87,7 @@ class InferenceEngine:
             plen = len(req.prompt)
             logits, pstate = self._prefill(
                 self.params, jnp.asarray(req.prompt)[None, :plen])
+            self.jit_dispatches += 1
             # scatter prefill KV into the batched cache at this slot
             def put(cache, pre):
                 # cache: (L, B, S, ...); pre: (L, 1, plen, ...)
@@ -104,6 +109,8 @@ class InferenceEngine:
             return []
         logits, self.state = self._decode(
             self.params, self.state, self._last_tok, self.lens)
+        self.jit_dispatches += 1
+        self.steps_dispatched += 1
         self.lens = jnp.where(
             jnp.isin(jnp.arange(self.max_slots),
                      jnp.array([r.slot for r in self.active.values()])),
@@ -129,6 +136,16 @@ class InferenceEngine:
             if not self.active and not self._queue:
                 break
         return done
+
+    @property
+    def jit_dispatches_per_step(self) -> float:
+        """Jitted model calls per work-doing iteration (prefills land in the
+        admitting step, so a step admitting k prompts costs 1 + k)."""
+        return self.jit_dispatches / max(self.steps_dispatched, 1)
+
+    def sync(self):
+        """Block until dispatched state updates have materialised."""
+        jax.block_until_ready(self.state)
 
     # ------------------------------------------------------ hibernation
     def extract_slot(self, slot: int):

@@ -14,6 +14,13 @@ Differences from the dense ``repro.serving.engine.InferenceEngine``:
     batch, and admission only needs blocks for the first chunk. New-turn
     prompt tokens on a retained session (``extend``) ride the same path,
     so multi-turn extension costs O(plen / chunk) steps, not O(plen).
+  * The iteration is **one jitted megastep**: decode rows and prefill
+    chunks are fused into a single (max_batch, C) token matrix — decode
+    rows are width-1 prefill rows — and greedy sampling runs inside the
+    jit, so one dispatch and one (max_batch,) int32 transfer advance the
+    whole batch (see DESIGN.md §10). The PR 2 loop (a dispatch per
+    prefilling sequence + a decode call) survives behind ``megastep=False``
+    as the benchmark baseline.
   * Sessions are first-class. A finished request may be *retained*
     (parked): its pages stay resident and evictable, and a later turn
     ``extend``s it. ``fork`` shares a session's pages copy-on-write, and
@@ -95,7 +102,8 @@ class PagedInferenceEngine:
     def __init__(self, cfg: ModelConfig, params, *, num_blocks: int = 64,
                  block_size: int = 16, max_batch: int = 8,
                  max_len: int = 256, prefill_chunk: int = 32,
-                 swap_store: Optional[KVSwapStore] = None):
+                 swap_store: Optional[KVSwapStore] = None,
+                 megastep: bool = True):
         assert cfg.family in ("dense", "moe", "vlm"), \
             "paged engine targets the decoder-only GQA family"
         self.cfg = cfg
@@ -108,6 +116,12 @@ class PagedInferenceEngine:
         self.swap = SwapManager(self.cache, swap_store,
                                 on_evict=self._on_evicted)
         self.max_pages = self.cache.pages_for(self.max_len)
+        # megastep=True (default): ONE jitted dispatch per engine iteration
+        # — decode tokens and prefill chunks fused into a single (B, C)
+        # forward with in-jit greedy sampling. megastep=False keeps the
+        # PR 2 loop (one _chunk dispatch per prefilling sequence plus a
+        # separate _decode call) as the benchmark baseline / fallback.
+        self.use_megastep = megastep
 
         self.reqs: Dict[int, PagedRequest] = {}
         self.active: Dict[int, PagedRequest] = {}
@@ -115,6 +129,11 @@ class PagedInferenceEngine:
         self._queue: List[PagedRequest] = []
         self._next_rid = 0
         self.decode_steps = 0
+        # dispatch accounting for the perf contract: jit_dispatches counts
+        # jitted model calls, steps_dispatched counts step()s that ran any —
+        # the megastep invariant is jit_dispatches_per_step == 1.0
+        self.jit_dispatches = 0
+        self.steps_dispatched = 0
         self.last_serviced: Dict[int, int] = {}   # rid -> tokens, last step
         # per-step casualty list: sequences the pool could not grow even
         # after reclaim (rid, reason) — aborted individually so one
@@ -128,6 +147,11 @@ class PagedInferenceEngine:
         self._chunk = jax.jit(
             lambda params, pools, toks, n, t, table:
             tr.prefill_chunk_paged(params, pools, toks, n, t, table, cfg),
+            donate_argnums=(1,))
+        self._mega = jax.jit(
+            lambda params, pools, toks, lens, valids, tables:
+            tr.mixed_step_paged(params, pools, toks, lens, valids, tables,
+                                cfg),
             donate_argnums=(1,))
 
     # ----------------------------------------------------------- public
@@ -241,6 +265,14 @@ class PagedInferenceEngine:
         req.table = self.swap.swap_in(rid)
         req.state = PARKED
         self.swap.mark_cold(rid, req.table)
+        if req.fresh_turn:
+            # hibernation freed the session's old blocks (purging their
+            # prefix-index entries); the rebound blocks hold the same prompt
+            # KV, so re-register them — a later prompt that block-aligns
+            # with this session's prefix must still adopt shared blocks
+            self.cache.register_prefix(
+                req.prompt, req.table,
+                min(req.num_tokens, len(req.prompt)))
 
     def release(self, rid: int):
         """Drop a session entirely, in any state (frees its decode slot,
@@ -367,33 +399,118 @@ class PagedInferenceEngine:
         """Advance the batch one iteration: every prefilling sequence takes
         one prompt chunk, every decoding sequence one token. Returns
         requests whose turn finished this step; per-rid service counts (in
-        tokens) land in ``last_serviced``."""
+        tokens) land in ``last_serviced``.
+
+        With ``megastep`` (the default) the whole iteration is ONE jitted
+        dispatch; the legacy path (one dispatch per prefilling sequence plus
+        a decode call) is kept as the benchmark baseline."""
         self._admit()
         self.last_serviced = {}
         self.last_failures = []
         if not self.active:
             return []
+        if self.use_megastep:
+            return self._step_megastep()
+        return self._step_legacy()
+
+    def _grown(self, req: PagedRequest, n_tokens: int) -> bool:
+        """Per-sequence OOM isolation: if the pool cannot grow this
+        sequence even after reclaim, abort IT (retained -> parked,
+        turn lost) and let its batchmates proceed untouched."""
+        try:
+            self._ensure_capacity(req, n_tokens)
+            return True
+        except OutOfBlocksError as e:
+            self.last_failures.append((req.rid, str(e)))
+            self.abort_turn(req.rid)
+            return False
+
+    def _finish_token(self, req: PagedRequest, tok: int,
+                      finished: List[PagedRequest]):
+        """Record a sampled token and retire the turn if it is complete."""
+        req.out_tokens.append(tok)
+        req.last_tok = tok
+        if (len(req.out_tokens) >= req.max_new_tokens
+                or req.num_tokens >= self.max_len - 1):
+            finished.append(req)
+            self._retire(req)
+
+    def _step_megastep(self) -> List[PagedRequest]:
+        """The fused iteration: build one (max_batch, C) token matrix where
+        decode rows carry 1 valid token and prefill rows carry up to
+        ``prefill_chunk``, run ONE jitted forward over the union (K/V
+        scatter, paged attention, greedy sampling all inside), and read back
+        a single (max_batch,) int32 token vector. Decode-only iterations
+        use the C == 1 trace bucket, so pure decode never pays chunk-width
+        FLOPs; two shape buckets total, still one dispatch per step."""
+        finished: List[PagedRequest] = []
+        rows: List[tuple] = []               # (req, T) surviving growth
+        for req in list(self.active.values()):
+            if req.prefilling:
+                T = min(self.prefill_chunk, len(req.pending))
+                if self._grown(req, req.num_tokens + T):
+                    rows.append((req, T))
+            elif self._grown(req, req.num_tokens + 1):
+                rows.append((req, 1))
+        if not rows:
+            return finished
+        C = self.prefill_chunk if any(r.prefilling for r, _ in rows) else 1
+        toks = np.zeros((self.max_batch, C), np.int32)
+        lens = np.zeros((self.max_batch,), np.int32)
+        valids = np.zeros((self.max_batch,), np.int32)
+        tables = np.full((self.max_batch, self.max_pages), NULL_BLOCK,
+                         np.int32)
+        for req, T in rows:
+            s = req.slot
+            if req.prefilling:
+                toks[s, :T] = req.pending[:T]
+            else:
+                toks[s, 0] = req.last_tok
+            lens[s] = req.num_tokens
+            valids[s] = T
+            tables[s] = req.table.padded(self.max_pages)
+        next_tok, pools = self._mega(
+            self.params, self.cache.pools(), jnp.asarray(toks),
+            jnp.asarray(lens), jnp.asarray(valids), jnp.asarray(tables))
+        self.cache.set_pools(pools)
+        self.jit_dispatches += 1
+        self.steps_dispatched += 1
+        if any(not r.prefilling for r, _ in rows):
+            self.decode_steps += 1
+        out = np.asarray(next_tok)           # (max_batch,) int32 — the only
+        for req, T in rows:                  # per-step device->host transfer
+            was_prefilling = req.prefilling
+            req.table.num_tokens += T
+            if was_prefilling:
+                del req.pending[:T]
+                if req.fresh_turn:
+                    # only the original prompt's write window may feed the
+                    # dedup index — extend turns write non-prompt tokens
+                    self.cache.register_prefix(req.prompt, req.table,
+                                               req.num_tokens)
+                self.last_serviced[req.rid] = T
+                if req.pending:
+                    continue                 # more chunks next step
+            else:
+                self.last_serviced[req.rid] = \
+                    self.last_serviced.get(req.rid, 0) + 1
+            self._finish_token(req, int(out[req.slot]), finished)
+        return finished
+
+    def _step_legacy(self) -> List[PagedRequest]:
+        """PR 2 iteration shape: one jitted ``_chunk`` call per prefilling
+        sequence, then one batched ``_decode`` call — 1 + n_prefilling
+        dispatches per step, full (B, vocab) logits crossing to host."""
         finished: List[PagedRequest] = []
         decoding = [r for r in self.active.values() if not r.prefilling]
         prefilling = [r for r in self.active.values() if r.prefilling]
-
-        def grown(req, n_tokens):
-            """Per-sequence OOM isolation: if the pool cannot grow this
-            sequence even after reclaim, abort IT (retained -> parked,
-            turn lost) and let its batchmates proceed untouched."""
-            try:
-                self._ensure_capacity(req, n_tokens)
-                return True
-            except OutOfBlocksError as e:
-                self.last_failures.append((req.rid, str(e)))
-                self.abort_turn(req.rid)
-                return False
+        dispatches_before = self.jit_dispatches
 
         # ---- chunked prefill: one block of prompt per sequence per step
         for req in prefilling:
             T = min(self.prefill_chunk, len(req.pending))
             n = req.num_tokens
-            if not grown(req, n + T):
+            if not self._grown(req, n + T):
                 continue
             buf = np.zeros((1, self.prefill_chunk), np.int32)
             buf[0, :T] = req.pending[:T]
@@ -402,6 +519,7 @@ class PagedInferenceEngine:
                 self.params, self.cache.pools(), jnp.asarray(buf),
                 jnp.int32(n), jnp.int32(T), jnp.asarray(row))
             self.cache.set_pools(pools)
+            self.jit_dispatches += 1
             req.table.num_tokens = n + T
             del req.pending[:T]
             if req.fresh_turn:
@@ -411,16 +529,12 @@ class PagedInferenceEngine:
                                            req.num_tokens)
             self.last_serviced[req.rid] = T
             if not req.pending:
-                tok = int(jnp.argmax(logits[0, T - 1]))
-                req.out_tokens.append(tok)
-                req.last_tok = tok
-                if (len(req.out_tokens) >= req.max_new_tokens
-                        or req.num_tokens >= self.max_len - 1):
-                    finished.append(req)
-                    self._retire(req)
+                self._finish_token(req, int(jnp.argmax(logits[0, T - 1])),
+                                   finished)
 
         # ---- decode: one token for every sequence past prefill
-        decoding = [r for r in decoding if grown(r, r.num_tokens + 1)]
+        decoding = [r for r in decoding
+                    if self._grown(r, r.num_tokens + 1)]
         if decoding:
             lens = np.zeros((self.max_batch,), np.int32)
             tables = np.full((self.max_batch, self.max_pages), NULL_BLOCK,
@@ -434,19 +548,16 @@ class PagedInferenceEngine:
                 self.params, self.cache.pools(), jnp.asarray(toks),
                 jnp.asarray(lens), jnp.asarray(tables))
             self.cache.set_pools(pools)
+            self.jit_dispatches += 1
             self.decode_steps += 1
             out = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
             for req in decoding:
                 req.table.num_tokens += 1
-                tok = int(out[req.slot])
-                req.out_tokens.append(tok)
-                req.last_tok = tok
                 self.last_serviced[req.rid] = \
                     self.last_serviced.get(req.rid, 0) + 1
-                if (len(req.out_tokens) >= req.max_new_tokens
-                        or req.num_tokens >= self.max_len - 1):
-                    finished.append(req)
-                    self._retire(req)
+                self._finish_token(req, int(out[req.slot]), finished)
+        if self.jit_dispatches != dispatches_before:
+            self.steps_dispatched += 1
         return finished
 
     def _retire(self, req: PagedRequest):
@@ -473,6 +584,17 @@ class PagedInferenceEngine:
         return done
 
     # ------------------------------------------------------------ stats
+    @property
+    def jit_dispatches_per_step(self) -> float:
+        """Jitted model calls per work-doing iteration — 1.0 under the
+        megastep, 1 + mean(n_prefilling) under the legacy loop."""
+        return self.jit_dispatches / max(self.steps_dispatched, 1)
+
+    def sync(self):
+        """Block until every dispatched pool update has materialised —
+        benchmarks call this so async dispatch cannot flatter wall-clock."""
+        jax.block_until_ready((self.cache.k, self.cache.v))
+
     def kv_stats(self) -> Dict[str, int]:
         alloc = self.cache.allocator
         live = sum(r.num_tokens for r in self.reqs.values()
