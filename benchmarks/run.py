@@ -95,18 +95,20 @@ def main() -> None:
         print("AgentRM benchmarks — live scheduling "
               "(serialized lanes vs fused MLFQ)")
         print("=" * 72)
-        rows, speedup, mega_speedup = live_bench.sched_live(seed=args.seed)
+        results = live_bench.sched_live(seed=args.seed)
         print()
-        print(live_bench.format_table(rows, speedup, mega_speedup))
-        for r in rows:
-            csv_lines.append(
-                f"sched_live_{r['Method']},0.0,"
-                f"tokens_per_s={r['tokens_per_s']};zombies={r['zombies']};"
-                f"steps={r['decode_steps']};"
-                f"dispatches_per_step={r['jit_dispatches_per_step']}")
-        csv_lines.append(f"sched_live_fused_speedup,0.0,{speedup:.2f}x")
-        csv_lines.append(
-            f"sched_live_megastep_speedup,0.0,{mega_speedup:.2f}x")
+        print(live_bench.format_tables(results))
+        for scen, res in results.items():
+            for r in res["rows"]:
+                csv_lines.append(
+                    f"sched_live_{scen}_{r['Method']},0.0,"
+                    f"tokens_per_s={r['tokens_per_s']};"
+                    f"zombies={r['zombies']};"
+                    f"itl_p95_ms={r['itl_p95_ms']};"
+                    f"padded={r['padded_token_fraction']};"
+                    f"dispatches_per_step={r['jit_dispatches_per_step']}")
+            for k, v in res["summary"].items():
+                csv_lines.append(f"sched_live_{scen}_{k},0.0,{v}x")
         print("\n[sched_live] wrote BENCH_sched_live.json")
 
     if not args.skip_roofline:

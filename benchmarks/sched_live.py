@@ -1,199 +1,348 @@
-"""Live scheduling benchmark: serialized lanes vs the fused MLFQ dispatcher
-vs the megastep engine, at equal hardware.
+"""Live scheduling benchmark: who owns the inference loop, and how well is
+each dispatch sized to the live workload mix?
 
-All runs drive the SAME paged engine configuration (same model, same block
-pool, same ``max_batch``) through the AgentRM middleware with a multi-agent,
-multi-turn workload of mixed prefill/decode traffic (prompts span several
-prefill chunks, so chunk prefill and decode interleave every round). What
-changes is who owns the inference loop and how many jitted dispatches one
-iteration costs:
+Three traffic scenarios, all driving the SAME paged engine configuration
+(same model, same block pool, same ``max_batch``) through the AgentRM
+middleware — what changes per mode is the dispatch discipline:
 
   * ``serialized-lanes`` — the pre-fusion design: thread-per-lane dispatch
-    over ``SerializedPagedBackend``, whose ``generate`` holds a backend-wide
-    lock for the whole decode loop. Turns serialize through an engine built
-    for continuous batching; the decode batch never holds more than one
-    live sequence.
-  * ``fused-mlfq`` — the PR 2 iteration-level design: one dispatcher loop
-    admits turns from the MLFQ queues into the engine's decode batch and
-    steps the union — but each engine iteration still costs
-    ``1 + n_prefilling`` jitted dispatches (one ``_chunk`` call per
-    prefilling sequence plus the batched decode), with full (B, vocab)
-    logits crossing to host.
-  * ``fused-megastep`` — this PR: decode rows and prefill chunks fused into
-    ONE jitted dispatch per iteration (Sarathi batch fusion over the paged
-    pools, greedy sampling inside the jit, a single (B,) int32 vector
-    crossing to host).
+    over ``SerializedPagedBackend`` (backend-wide lock per turn). Mixed
+    scenario only; the historical baseline.
+  * ``fused-mlfq`` — the PR 2 iteration-level design: one dispatcher loop,
+    but ``1 + n_prefilling`` jitted dispatches per engine iteration. Mixed
+    scenario only.
+  * ``fused-megastep`` — the PR 3 fixed-chunk megastep: ONE jitted dispatch
+    per iteration, C in {1, prefill_chunk} — one prefilling row forces every
+    decode batchmate through chunk-width FLOPs, and a long prompt is capped
+    at one fixed chunk per step no matter how empty the batch is.
+  * ``fused-budget`` — this PR (DESIGN.md §11): per-step token budget,
+    decode-first packing, variable-width prefill chunks, dispatch width
+    drawn from the bounded pow2 bucket set. Still one dispatch per step.
+
+Scenarios (token budgets are per-scenario knobs — right-sizing is the whole
+point — but within a scenario every mode runs at equal hardware):
+
+  * ``mixed``         — sub-chunk agent prompts interleave with sustained,
+                        desynced decode against a throughput-tuned large
+                        chunk. The budget right-sizes the dispatch width to
+                        the live mix, so decode batchmates stop paying
+                        full-chunk FLOPs: P95 inter-token latency and
+                        padded_token_fraction must both improve.
+  * ``prefill-heavy`` — long prompts, near-empty batch, latency-tuned
+                        small chunk. The budget lets a prompt burn many
+                        chunks' worth of budget in one dispatch instead of
+                        dripping one fixed chunk per step: >= 1.3x
+                        tokens/sec.
+  * ``decode-heavy``  — short prompts, long generations. Mostly C == 1
+                        steps in both megastep modes; the budget must not
+                        regress throughput, and the prefill bursts fit the
+                        budget at a right-sized (narrower) width.
 
 Timed regions end with ``engine.sync()`` (``jax.block_until_ready`` over
-the KV pools) so async dispatch cannot flatter wall-clock numbers.
+the KV pools) so async dispatch cannot flatter wall-clock numbers. TTFT and
+inter-token latencies are sampled inside the engine (wall clock at each
+output token, after the device->host transfer of the sampled ids). CAVEAT:
+the engine's TTFT clock starts at engine admission (``submit``/``extend``),
+so it measures prefill pacing only — middleware queueing (MLFQ wait, the
+serialized backend's lock) is NOT included, and ``ttft_p95_ms`` is only
+comparable across the engine-owned modes within a scenario, not a
+full-stack first-token latency.
 
-Reports per mode: wall seconds, decoded tokens/sec, engine decode steps,
-``jit_dispatches_per_step`` (must be 1.0 under the megastep), zombies (must
-be 0), completed turns. Emits ``BENCH_sched_live.json``.
+Reports per run: wall seconds, decoded tokens/sec, TTFT p95, P95
+inter-token latency, ``padded_token_fraction``, trace buckets used vs the
+bounded bucket set, ``jit_dispatches_per_step`` (must be 1.0 for both
+megastep modes), zombies (must be 0). Emits ``BENCH_sched_live.json``.
 
     PYTHONPATH=src python -m benchmarks.sched_live [--smoke] [--check]
 
-``--check`` exits non-zero if any fused run reaped a zombie, failed a turn,
-or the megastep run dispatched more than one jit call per step — the CI
-smoke gate.
+``--check`` is the CI smoke gate: non-zero exit if any fused run reaped a
+zombie or failed a turn, if either megastep mode dispatched more than one
+jit call per step, or if a budget run's distinct trace buckets exceeded its
+bounded pow2 bucket set (the recompile guard).
 """
 from __future__ import annotations
 
 import argparse
 import json
 import time
-from typing import List
+from typing import List, Optional
 
 import numpy as np
+
+SCENARIOS = {
+    # prompt_repeat is the MAX prompt scale: agent i's prompt is the base
+    # string repeated 1 + (i % prompt_repeat) times (capped at
+    # prompt_tokens), so prompt lengths vary across agents and prefill
+    # overlaps decode instead of the whole fleet phase-locking; budget is
+    # the fused-budget mode's per-step token budget
+    # a throughput-tuned deployment runs a LARGE prefill chunk (128 here;
+    # real Sarathi/vLLM chunks are 512+): great when prompts fill it, but
+    # agent-turn prompts here are sub-chunk (17-32 tokens), so under mixed
+    # traffic every decode batchmate is padded to the full chunk width
+    # whenever anyone prefills — a 4x+ wider (and costlier) dispatch than
+    # the work needs. The budget (64 >= any prompt, so it almost never
+    # rations) right-sizes C down to the pow2 bucket the live mix actually
+    # needs (<= 32) — same real work per step, a quarter the dispatched
+    # slots on every prefill-carrying step
+    "mixed": dict(agents=8, turns=2, new_tokens=10, jitter=8,
+                  prompt_tokens=32, prompt_repeat=4, budget=64, chunk=128,
+                  max_len=192),
+    # long prompts against a near-EMPTY batch and a latency-tuned small
+    # chunk (8): the fixed chunk drips one chunk per step no matter how
+    # idle the batch is, so a 192-token prompt takes 24 dispatches; the
+    # budget lets a prompt burn the whole budget (24 chunks' worth) in one
+    # right-sized dispatch. Two desynced agents at max_batch 2 keep the
+    # batch prefill-dominated — the regime the fixed chunk wastes most
+    "prefill-heavy": dict(agents=2, turns=2, new_tokens=2, jitter=2,
+                          prompt_tokens=192, prompt_repeat=1,
+                          prompt_scale=12, budget=192, chunk=8,
+                          max_len=448, max_batch=2),
+    # short prompts, long generations: mostly C == 1 steps either way; the
+    # budget's win is the prefill bursts (8 rows x 8 tokens fit the budget
+    # exactly, dispatched at C == 8 instead of chunk width 16)
+    "decode-heavy": dict(agents=8, turns=1, new_tokens=24, prompt_tokens=8,
+                         prompt_repeat=1, budget=64, chunk=16, max_len=192),
+}
 
 
 def _count_tokens(outs: List[str]) -> int:
     return sum(len(o.split(",")) for o in outs if o.startswith("tok:"))
 
 
-def _drive(rm, eng, agents: int, turns: int, timeout: float = 600.0):
+def _drive(rm, eng, sc: dict, timeout: float = 600.0):
     """Submit `turns` rounds of one turn per agent (round n+1 extends the
     sessions round n parked); returns (wall_s, tokens, completed)."""
-    # uncounted warmup turn: pays the jit compiles (megastep shape buckets /
-    # chunk prefill + decode) so all modes are measured steady-state
-    rm.submit("warmup", "compile everything once, please").result(timeout)
-    outs: List[str] = []
+    scale = sc.get("prompt_scale", 1)
+    # uncounted warmup turn: pays the session-path jit compiles (the
+    # megastep trace buckets themselves are precompiled by
+    # ``compile_buckets`` before this) so all modes measure steady-state
+    rm.submit("warmup", "compile everything once, please " *
+              (scale * sc["prompt_repeat"])).result(timeout)
+    # reset EVERY reported counter after warmup so all columns describe
+    # the same measurement window (buckets, dispatch ratios, padding,
+    # latency samples)
+    eng.ttft_s.clear()
+    eng.itl_s.clear()
+    eng.trace_buckets.clear()
+    eng.tokens_real = eng.tokens_dispatched = 0
+    eng.jit_dispatches = eng.steps_dispatched = eng.decode_steps = 0
+    # every round is submitted up front — an agent's round-n+1 turn queues
+    # behind its round-n turn (session_busy rotation), so agents desync and
+    # prefill genuinely overlaps batchmates' decode instead of the whole
+    # fleet phase-locking into all-prefill then all-decode waves
     t0 = time.perf_counter()
-    for turn in range(turns):
-        handles = [rm.submit(f"agent{i}",
-                             f"this is turn {turn} for agent {i} — " * 3)
-                   for i in range(agents)]
-        outs += [h.result(timeout) for h in handles]
+    handles = [rm.submit(f"agent{i}",
+                         f"turn {turn} agent {i} — "
+                         * (scale * (1 + i % sc["prompt_repeat"])))
+               for turn in range(sc["turns"])
+               for i in range(sc["agents"])]
+    outs = [h.result(timeout) for h in handles]
     eng.sync()            # don't let async dispatch flatter the clock
     wall = time.perf_counter() - t0
     return wall, _count_tokens(outs), len(outs)
 
 
-def sched_live(seed: int = 0, *, agents: int = 8, turns: int = 2,
-               max_batch: int = 8, new_tokens: int = 8,
-               num_blocks: int = 129, block_size: int = 8,
-               prefill_chunk: int = 16):
+def _p95(xs: List[float]) -> float:
+    return float(np.percentile(np.asarray(xs), 95)) if xs else 0.0
+
+
+def run_mode(cfg, params, mode: str, sc: dict, *, max_batch: int,
+             num_blocks: int, block_size: int, seed: int,
+             budget: Optional[int]) -> dict:
+    from repro.core import AgentRM, AgentRMConfig
+    from repro.serving import (PagedEngineBackend, PagedInferenceEngine,
+                               SerializedPagedBackend)
+
+    megastep = mode in ("fused-megastep", "fused-budget")
+    max_batch = sc.get("max_batch", max_batch)   # scenario override: a
+    # near-empty-batch scenario measures at the batch width it describes
+    eng = PagedInferenceEngine(
+        cfg, params, num_blocks=num_blocks, block_size=block_size,
+        max_batch=max_batch, max_len=sc["max_len"],
+        prefill_chunk=sc["chunk"], megastep=megastep,
+        token_budget=budget if mode == "fused-budget" else None)
+    backend_cls = (SerializedPagedBackend if mode == "serialized-lanes"
+                   else PagedEngineBackend)
+    # every mode — including the serialized baseline — gets the exact same
+    # workload knobs, or the cross-mode speedups would compare traffic
+    backend = backend_cls(eng, max_new_tokens=sc["new_tokens"],
+                          prompt_tokens=sc["prompt_tokens"],
+                          new_tokens_jitter=sc.get("jitter", 0))
+    # pay every megastep trace bucket's XLA compile up front — the bounded
+    # bucket set is what makes this a finite, startup-time cost
+    eng.compile_buckets()
+    # generous detect_after: no mode should reap healthy turns that are
+    # merely queued behind the backend lock / the decode batch
+    rm = AgentRM(backend, AgentRMConfig(lanes=max_batch,
+                                        detect_after_s=300.0, seed=seed))
+    try:
+        wall, tokens, completed = _drive(rm, eng, sc)
+        snap = rm.monitor.snapshot()
+        st = eng.step_stats()
+        return {
+            "Method": mode,
+            "wall_s": round(wall, 2),
+            "tokens": tokens,
+            "tokens_per_s": round(tokens / wall, 2),
+            "ttft_p95_ms": round(_p95(eng.ttft_s) * 1e3, 1),
+            "itl_p95_ms": round(_p95(eng.itl_s) * 1e3, 1),
+            "padded_token_fraction": round(st["padded_token_fraction"], 3),
+            "trace_buckets": st["trace_buckets"],
+            "bucket_set": st["bucket_set"],
+            "decode_steps": eng.decode_steps,
+            "jit_dispatches_per_step":
+                round(st["jit_dispatches_per_step"], 2),
+            "completed_turns": completed,
+            "zombies": snap.zombies_reaped,
+            "recoveries": snap.recoveries,
+        }
+    finally:
+        rm.shutdown()
+
+
+def sched_live(seed: int = 0, *, max_batch: int = 8, num_blocks: int = 193,
+               block_size: int = 8, smoke: bool = False):
     import jax
 
     from repro.configs import get_smoke_config
-    from repro.core import AgentRM, AgentRMConfig
     from repro.models import build
-    from repro.serving import (PagedEngineBackend, PagedInferenceEngine,
-                               SerializedPagedBackend)
 
     cfg = get_smoke_config("gemma-2b").replace(remat=False)
     model = build(cfg)
     params = model.init_params(jax.random.PRNGKey(seed))
 
-    def make_engine(megastep: bool):
-        # max_len fits two 48-token prompts + generations per session (the
-        # mixed-traffic prompts span 3 prefill chunks each)
-        return PagedInferenceEngine(
-            cfg, params, num_blocks=num_blocks, block_size=block_size,
-            max_batch=max_batch, max_len=192, prefill_chunk=prefill_chunk,
-            megastep=megastep)
+    scenarios = {k: dict(v) for k, v in SCENARIOS.items()}
+    if smoke:
+        for sc in scenarios.values():
+            sc["agents"] = min(sc["agents"], 4)
+            sc["turns"] = 1
+            sc["new_tokens"] = min(sc["new_tokens"], 6)
+        max_batch = 4
 
-    def make_rm(backend):
-        # generous detect_after: no mode should reap healthy turns that
-        # are merely queued behind the backend lock / the decode batch
-        return AgentRM(backend, AgentRMConfig(
-            lanes=max_batch, detect_after_s=300.0, seed=seed))
+    results = {}
+    for name, sc in scenarios.items():
+        # the full 4-way comparison on mixed traffic; the two megastep
+        # variants head-to-head on the skewed scenarios
+        modes = (("serialized-lanes", "fused-mlfq", "fused-megastep",
+                  "fused-budget") if name == "mixed"
+                 else ("fused-megastep", "fused-budget"))
+        # CPU wall clocks at these sizes are noisy: run each mode several
+        # times and report the per-metric median (shape-derived metrics
+        # like padded_token_fraction are identical across repeats anyway);
+        # correctness counters (zombies, dispatches/step) take their worst
+        # value so a regression in ANY repeat fails the check
+        reps = 1 if smoke else 3
+        rows = []
+        for m in modes:
+            runs = [run_mode(cfg, params, m, sc, max_batch=max_batch,
+                             num_blocks=num_blocks, block_size=block_size,
+                             seed=seed, budget=sc["budget"])
+                    for _ in range(reps)]
+            agg = dict(runs[0])
+            for key in ("wall_s", "tokens_per_s", "ttft_p95_ms",
+                        "itl_p95_ms", "padded_token_fraction"):
+                agg[key] = round(float(np.median([r[key] for r in runs])), 3)
+            agg["zombies"] = max(r["zombies"] for r in runs)
+            agg["jit_dispatches_per_step"] = max(
+                r["jit_dispatches_per_step"] for r in runs)
+            agg["trace_buckets"] = sorted(
+                set().union(*[set(r["trace_buckets"]) for r in runs]))
+            agg["completed_turns"] = min(r["completed_turns"] for r in runs)
+            rows.append(agg)
+        by = {r["Method"]: r for r in rows}
+        summary = {}
+        if "fused-mlfq" in by:
+            summary["fused_speedup_tokens_per_s"] = round(
+                by["fused-mlfq"]["tokens_per_s"]
+                / max(by["serialized-lanes"]["tokens_per_s"], 1e-9), 2)
+            summary["megastep_speedup_tokens_per_s"] = round(
+                by["fused-megastep"]["tokens_per_s"]
+                / max(by["fused-mlfq"]["tokens_per_s"], 1e-9), 2)
+        summary["budget_speedup_tokens_per_s"] = round(
+            by["fused-budget"]["tokens_per_s"]
+            / max(by["fused-megastep"]["tokens_per_s"], 1e-9), 2)
+        results[name] = {"config": sc, "rows": rows, "summary": summary}
 
-    modes = (("serialized-lanes", SerializedPagedBackend, False),
-             ("fused-mlfq", PagedEngineBackend, False),
-             ("fused-megastep", PagedEngineBackend, True))
-    rows = []
-    for mode, backend_cls, megastep in modes:
-        eng = make_engine(megastep)
-        rm = make_rm(backend_cls(eng, max_new_tokens=new_tokens))
-        try:
-            wall, tokens, completed = _drive(rm, eng, agents, turns)
-            snap = rm.monitor.snapshot()
-            rows.append({
-                "Method": mode,
-                "wall_s": round(wall, 2),
-                "tokens": tokens,
-                "tokens_per_s": round(tokens / wall, 2),
-                "decode_steps": eng.decode_steps,
-                "jit_dispatches_per_step":
-                    round(eng.jit_dispatches_per_step, 2),
-                "completed_turns": completed,
-                "zombies": snap.zombies_reaped,
-                "recoveries": snap.recoveries,
-            })
-        finally:
-            rm.shutdown()
-
-    serial = next(r for r in rows if r["Method"] == "serialized-lanes")
-    fused = next(r for r in rows if r["Method"] == "fused-mlfq")
-    mega = next(r for r in rows if r["Method"] == "fused-megastep")
-    speedup = fused["tokens_per_s"] / max(serial["tokens_per_s"], 1e-9)
-    mega_speedup = mega["tokens_per_s"] / max(fused["tokens_per_s"], 1e-9)
     payload = {
-        "config": {"agents": agents, "turns": turns, "max_batch": max_batch,
-                   "new_tokens": new_tokens, "num_blocks": num_blocks,
-                   "block_size": block_size, "prefill_chunk": prefill_chunk,
-                   "seed": seed},
-        "rows": rows,
-        "fused_speedup_tokens_per_s": round(speedup, 2),
-        "megastep_speedup_tokens_per_s": round(mega_speedup, 2),
+        "config": {"max_batch": max_batch, "num_blocks": num_blocks,
+                   "block_size": block_size, "seed": seed, "smoke": smoke},
+        "scenarios": results,
     }
     with open("BENCH_sched_live.json", "w") as f:
         json.dump(payload, f, indent=2)
-    return rows, speedup, mega_speedup
+    return results
 
 
-def format_table(rows: List[dict], speedup: float,
-                 mega_speedup: float) -> str:
-    hdr = ["Method", "wall_s", "tokens", "tokens_per_s", "decode_steps",
-           "jit_dispatches_per_step", "completed_turns", "zombies",
-           "recoveries"]
-    out = ["### Live scheduling — serialized lanes vs fused MLFQ vs "
-           "megastep (equal hardware)"]
-    out.append("| " + " | ".join(hdr) + " |")
-    out.append("|" + "---|" * len(hdr))
-    for r in rows:
-        out.append("| " + " | ".join(str(r[h]) for h in hdr) + " |")
-    out.append(f"\nfused/serialized tokens/sec: **{speedup:.2f}x**; "
-               f"megastep/fused tokens/sec: **{mega_speedup:.2f}x**")
+def format_tables(results: dict) -> str:
+    hdr = ["Method", "wall_s", "tokens_per_s", "ttft_p95_ms", "itl_p95_ms",
+           "padded_token_fraction", "trace_buckets",
+           "jit_dispatches_per_step", "completed_turns", "zombies"]
+    out = []
+    for name, res in results.items():
+        out.append(f"### Live scheduling — {name} (equal hardware)")
+        out.append("| " + " | ".join(hdr) + " |")
+        out.append("|" + "---|" * len(hdr))
+        for r in res["rows"]:
+            out.append("| " + " | ".join(str(r[h]) for h in hdr) + " |")
+        out.append("summary: " + ", ".join(
+            f"{k}={v}x" for k, v in res["summary"].items()) + "\n")
     return "\n".join(out)
+
+
+def check(results: dict, smoke: bool):
+    """The CI gate: correctness invariants only (never wall-clock ratios —
+    CPU CI boxes are too noisy for perf gates; the recorded JSON carries
+    the ratios for the acceptance record)."""
+    problems = []
+    for name, res in results.items():
+        sc = res["config"]
+        expect = sc["agents"] * sc["turns"]
+        for r in res["rows"]:
+            tag = f"{name}/{r['Method']}"
+            if r["Method"] != "serialized-lanes" and r["zombies"] != 0:
+                problems.append(f"{tag} reaped {r['zombies']} zombies "
+                                "(must stay 0)")
+            if r["completed_turns"] != expect:
+                problems.append(f"{tag} completed "
+                                f"{r['completed_turns']}/{expect} turns")
+            if r["Method"] in ("fused-megastep", "fused-budget"):
+                if r["jit_dispatches_per_step"] != 1.0:
+                    problems.append(
+                        f"{tag} dispatched {r['jit_dispatches_per_step']} "
+                        "jit calls per step (must be exactly 1)")
+                # recompile guard: every dispatch width must come from the
+                # bounded bucket set, so retraces stay <= len(bucket_set)
+                extra = set(r["trace_buckets"]) - set(r["bucket_set"])
+                if extra:
+                    problems.append(f"{tag} traced widths {sorted(extra)} "
+                                    f"outside bucket set {r['bucket_set']}")
+                if len(r["trace_buckets"]) > len(r["bucket_set"]):
+                    problems.append(
+                        f"{tag} used {len(r['trace_buckets'])} trace "
+                        f"buckets > |bucket set| {len(r['bucket_set'])}")
+    if problems:
+        raise SystemExit("; ".join(problems))
+    print("[sched_live] check passed: 0 zombies, all turns completed, "
+          "megastep modes at 1 jit dispatch per step, trace buckets "
+          "within the bounded pow2 set")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny sizes for CI (4 agents, 1 turn, 4 tokens)")
+                    help="tiny sizes for CI (<=4 agents, 1 turn per "
+                         "scenario)")
     ap.add_argument("--check", action="store_true",
-                    help="exit non-zero on zombie/turn/dispatch regression")
+                    help="exit non-zero on zombie/turn/dispatch/recompile "
+                         "regression")
     args = ap.parse_args()
 
-    kw = dict(agents=4, turns=1, new_tokens=4, max_batch=4) if args.smoke \
-        else {}
-    rows, speedup, mega_speedup = sched_live(seed=args.seed, **kw)
-    print(format_table(rows, speedup, mega_speedup))
-    print("\n[sched_live] wrote BENCH_sched_live.json")
-
+    results = sched_live(seed=args.seed, smoke=args.smoke)
+    print(format_tables(results))
+    print("[sched_live] wrote BENCH_sched_live.json")
     if args.check:
-        expect = (4 if args.smoke else 8) * (1 if args.smoke else 2)
-        problems = []
-        for name in ("fused-mlfq", "fused-megastep"):
-            r = next(x for x in rows if x["Method"] == name)
-            if r["zombies"] != 0:
-                problems.append(f"{name} run reaped {r['zombies']} zombies "
-                                "(must stay 0)")
-            if r["completed_turns"] != expect:
-                problems.append(f"{name} run completed "
-                                f"{r['completed_turns']}/{expect} turns")
-        mega = next(x for x in rows if x["Method"] == "fused-megastep")
-        if mega["jit_dispatches_per_step"] != 1.0:
-            problems.append(
-                f"megastep dispatched {mega['jit_dispatches_per_step']} "
-                "jit calls per step (must be exactly 1)")
-        if problems:
-            raise SystemExit("; ".join(problems))
-        print("[sched_live] check passed: 0 zombies, all turns completed, "
-              "megastep at 1 jit dispatch per step")
+        check(results, args.smoke)
 
 
 if __name__ == "__main__":

@@ -10,14 +10,17 @@ Two dispatch modes, chosen by the backend's contract:
   * **Fused (iteration-level)** — for a ``SteppableBackend`` (the paged
     engine). ONE dispatcher loop owns the inference iteration: it pulls
     turns from the MLFQ queues, admits them into the engine's decode batch
-    (gated on free KV blocks *and* the token bucket), and drives
-    ``backend.step()`` over the union of active sequences. MLFQ quanta are
-    **decoded tokens**: a turn that has been serviced ``quantum_for(turn)``
-    tokens while others wait is *parked in place* (pages retained, swapped
-    under pressure) and re-queued — demotion after the level's token
-    allotment, boost unchanged. The reaper condemns a stalled turn and the
-    dispatcher aborts it via ``abort_turn`` *between* steps, so batchmates
-    never see a mid-step perturbation.
+    (gated on free KV blocks *and* the token bucket — the engine's block
+    reservation is token-budget-aware, see DESIGN.md §11), and drives
+    ``backend.step()`` over the union of active sequences; the engine
+    assembles each iteration decode-first and right-sizes the dispatch to
+    its per-step token budget. MLFQ quanta are **decoded tokens**: a turn
+    that has been serviced ``quantum_for(turn)`` tokens while others wait
+    is *parked in place* (pages retained, swapped under pressure) and
+    re-queued — demotion after the level's token allotment, boost
+    unchanged. The reaper condemns a stalled turn and the dispatcher
+    aborts it via ``abort_turn`` *between* steps, so batchmates never see
+    a mid-step perturbation.
   * **Threaded (turn-level)** — the legacy path for plain ``ModelBackend``
     backends whose ``generate`` blocks per turn: semaphore lane pool, one
     thread per running turn, heartbeat watchdog. Kept for test fakes and
@@ -104,8 +107,10 @@ class SteppableBackend:
         raise NotImplementedError
 
     def can_admit(self, agent_id: str, prompt: str) -> bool:
-        """Admission gate: free batch slot, first-chunk KV blocks, and no
-        other in-flight turn on this agent's session."""
+        """Admission gate: free batch slot, first-chunk KV blocks (what
+        the engine's first dispatch can actually write — min of prompt,
+        prefill chunk, and token budget), and no other in-flight turn on
+        this agent's session."""
         raise NotImplementedError
 
 
@@ -379,28 +384,32 @@ class AgentRM:
         AIMD token bucket and on free KV blocks (head-of-line: a turn the
         engine can't hold yet blocks its queue position). A turn whose
         *session* is busy (its previous turn still in flight, possibly
-        parked behind it in these very queues) is rotated past instead —
-        head-of-line blocking on it could deadlock the queue until boost."""
-        tried: set = set()
+        parked behind it in these very queues) is held ASIDE for the rest
+        of the scan and only requeued afterwards. Holding it aside — not
+        requeueing it mid-scan — is load-bearing: a busy turn requeued to
+        Q0 would keep the dequeue scan pinned there, shadowing a demoted
+        parked turn in Q1 of the *same agent* forever (the successor can't
+        run until the parked turn finishes; the parked turn is never
+        reached because the successor refills Q0 every rotation). That
+        priority inversion stalled admission until the starvation boost —
+        a 45-second dead batch under multi-turn traffic."""
+        deferred: list = []
         while len(self._running) < self.cfg.lanes:
             nxt = self.policy.dequeue(now)
             if nxt is None:
-                return
+                break
             prompt = self._prompts[nxt.tid]
             resuming = nxt.tid in self._parked
             if not resuming:
                 if be.session_busy(nxt.agent_id):
-                    self._requeue_waiting(nxt, now)
-                    if nxt.tid in tried:
-                        return          # queue cycled back — stop spinning
-                    tried.add(nxt.tid)
+                    deferred.append(nxt)    # out of the queue for this scan
                     continue
                 # a resumed turn already paid admission; only new turns are
                 # gated on engine blocks and the AIMD token bucket
                 if not be.can_admit(nxt.agent_id, prompt) \
                         or not self.admission.admit(nxt.tokens, now):
                     self._requeue_waiting(nxt, now)
-                    return
+                    break
             if resuming:
                 rec = self._parked.pop(nxt.tid)
                 try:
@@ -435,6 +444,8 @@ class AgentRM:
                 nxt.first_wait = now - nxt.arrival
             self.monitor.on_queue_depth(int(nxt.queue_class),
                                         len(self.policy))
+        for t in deferred:
+            self._requeue_waiting(t, now)
 
     def _finish_fused(self, tid: int, result=None, error=None):
         """Caller holds the lock."""

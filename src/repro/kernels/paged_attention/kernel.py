@@ -12,6 +12,11 @@ sequence owns an int32 page table naming its blocks in position order.
     against each page, per-row ``cache_len`` offsets and ragged ``valid``
     widths. Decode rows are its C == 1 special case, which is what lets the
     engine fuse prefill chunks and decode tokens into ONE jitted megastep.
+    C is not baked into the program logic — the mask and page walk are
+    driven entirely by the per-row scalars — so the engine's token-budget
+    packer can instantiate the same kernel at any width from its bounded
+    pow2 bucket set ({1, 8, 16, ..., budget}); each bucket is one traced
+    shape, and rows of different real widths share one dispatch.
 
 Both the per-sequence valid lengths and the page tables arrive via scalar
 prefetch, so the BlockSpec index maps can compute each grid step's HBM block

@@ -4,7 +4,9 @@ pool layout is the allocator's native layout, so no transpose or gather of
 the cache happens on the hot path — the kernel's index maps do the page
 walk. ``paged_attention`` is the decode (one query token) form;
 ``paged_prefill_attention`` is the chunked-prefill form the megastep uses
-(decode rows are its C == 1 special case)."""
+(decode rows are its C == 1 special case; the chunk axis C is whatever
+pow2 trace bucket the engine's token-budget packer selected — per-row
+``valids`` carry the ragged real widths)."""
 from __future__ import annotations
 
 from repro.kernels.paged_attention.kernel import (paged_attention_bhd,

@@ -4,7 +4,11 @@
 (chunked prefill / megastep rows) gather each sequence's pages in table
 order — materialising the contiguous view the kernels avoid — then run a
 masked softmax with per-sequence offsets and valid lengths. They are the
-CPU fallback the models use when ``cfg.use_pallas`` is off.
+CPU fallback the models use when ``cfg.use_pallas`` is off. Like the
+kernels, they take the chunk axis C from the input shape and the ragged
+per-row real widths from ``valids`` — the oracles stay in lockstep with
+the kernels across every token-budget trace bucket, which is what the
+ragged-width parity tests sweep.
 
 ``paged_prefill_attention_gathered_oracle`` runs the kernel's own online-
 softmax program over the jnp-gathered contiguous view (same traced ops,

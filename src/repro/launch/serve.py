@@ -7,6 +7,13 @@ Wires every paper component end to end: agents submit turns -> MLFQ +
 admission control -> engine lanes (continuous-batching slots) -> CLM
 accumulates each agent's context with PSI injection; the reaper watches
 heartbeats emitted per decode step.
+
+``--paged`` swaps the dense slot engine for the paged megastep engine
+behind the fused iteration-level dispatcher; ``--token-budget N`` turns on
+the stall-free token-budget pack (DESIGN.md §11 — decode-first, bounded
+pow2 trace buckets). The budget is validated by the engine: it must be at
+least ``--max-batch`` so every active row makes progress every step, and
+it is clamped to ``max_len``. Unset keeps fixed-chunk megastep behaviour.
 """
 from __future__ import annotations
 
@@ -19,7 +26,33 @@ from repro.configs import get_config, get_smoke_config
 from repro.core import AgentRM, AgentRMConfig
 from repro.core.scheduler.task import QueueClass
 from repro.models import build
-from repro.serving import EngineBackend, InferenceEngine
+from repro.serving import (EngineBackend, InferenceEngine,
+                           PagedEngineBackend, PagedInferenceEngine)
+
+
+def build_backend(cfg, params, args):
+    """Engine + middleware backend from CLI args (separated for tests)."""
+    if not args.paged:
+        if args.token_budget:
+            raise SystemExit("--token-budget requires --paged (the dense "
+                             "slot engine has no megastep to budget)")
+        engine = InferenceEngine(cfg, params, max_slots=args.lanes,
+                                 max_len=args.max_len)
+        return engine, EngineBackend(engine,
+                                     max_new_tokens=args.max_new_tokens)
+    try:
+        engine = PagedInferenceEngine(
+            cfg, params, num_blocks=args.num_blocks,
+            block_size=args.block_size, max_batch=args.max_batch,
+            max_len=args.max_len, prefill_chunk=args.prefill_chunk,
+            token_budget=args.token_budget or None)
+    except ValueError as e:         # budget validation, as a CLI error
+        raise SystemExit(f"invalid --token-budget: {e}") from e
+    # pre-trace every megastep bucket so live traffic never blocks the
+    # fused dispatcher (and its heartbeats) in an XLA compile
+    engine.compile_buckets()
+    return engine, PagedEngineBackend(engine,
+                                      max_new_tokens=args.max_new_tokens)
 
 
 def main(argv=None) -> int:
@@ -28,18 +61,30 @@ def main(argv=None) -> int:
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--agents", type=int, default=3)
     ap.add_argument("--turns", type=int, default=9)
-    ap.add_argument("--lanes", type=int, default=2)
+    ap.add_argument("--lanes", type=int, default=2,
+                    help="dispatcher lanes for the dense engine; ignored "
+                         "under --paged (lanes = --max-batch there)")
     ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=192)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged megastep engine + fused dispatcher")
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="paged decode batch width (rows per megastep)")
+    ap.add_argument("--num-blocks", type=int, default=129)
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--token-budget", type=int, default=0,
+                    help="stall-free per-step token budget (0 = fixed "
+                         "chunk); must be >= --max-batch")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     cfg = cfg.replace(remat=False)
     model = build(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
-    engine = InferenceEngine(cfg, params, max_slots=args.lanes, max_len=192)
-    backend = EngineBackend(engine, max_new_tokens=args.max_new_tokens)
-    rm = AgentRM(backend, AgentRMConfig(lanes=args.lanes,
-                                        detect_after_s=20.0))
+    engine, backend = build_backend(cfg, params, args)
+    lanes = args.max_batch if args.paged else args.lanes
+    rm = AgentRM(backend, AgentRMConfig(lanes=lanes, detect_after_s=20.0))
 
     t0 = time.time()
     handles = []
@@ -60,6 +105,12 @@ def main(argv=None) -> int:
           f"p50 {lat[len(lat)//2]*1000:.0f}ms "
           f"p95 {lat[int(0.95*(len(lat)-1))]*1000:.0f}ms | "
           f"reaped {snap.zombies_reaped} recovered {snap.recoveries}")
+    if args.paged:
+        st = engine.step_stats()
+        print(f"[serve] megastep: {st['jit_dispatches_per_step']:.2f} "
+              f"dispatches/step, padded_token_fraction "
+              f"{st['padded_token_fraction']:.3f}, trace buckets "
+              f"{st['trace_buckets']} (set {st['bucket_set']})")
     for agent_id, clm in rm.clm.items():
         print(f"[serve] {agent_id}: ctx={clm.window_tokens} tok, "
               f"psi='{clm.psi_message()[:64]}...'")

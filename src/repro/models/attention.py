@@ -216,19 +216,24 @@ def gqa_prefill_chunk_paged(params, x, k_pool, v_pool, page_table, cache_len,
 
 def gqa_mixed_step_paged(params, x, k_pool, v_pool, page_tables, cache_lens,
                          valids, cfg: ModelConfig, *, interpret: bool = False):
-    """One fused Sarathi megastep row set: every row of the fixed
-    ``(B, C)`` batch is a prefill chunk — decode rows simply carry
-    ``valids == 1`` — so ONE call writes every row's K/V into its pages and
-    attends causally over chunk + resident history.
+    """One fused Sarathi megastep row set: every row of the ``(B, C)``
+    batch is a prefill chunk — decode rows simply carry ``valids == 1`` —
+    so ONE call writes every row's K/V into its pages and attends causally
+    over chunk + resident history.
 
     x: (B, C, d) embeddings (token padding beyond ``valids`` is garbage the
     caller discards); k_pool/v_pool: (num_blocks, blk, hkv, hd) one layer's
     pool slice; page_tables: (B, npages) int32, null-padded; cache_lens:
     (B,) int32 tokens resident *before* this step; valids: (B,) int32 real
     tokens per row (0 = inactive slot; its writes land in the null block and
-    its outputs are discarded). Per-row isolation is the page table itself:
-    a row only reads/writes its own blocks, so batching rows into one
-    dispatch cannot change any row's math.
+    its outputs are discarded). C is whatever trace bucket the engine's
+    token-budget packer chose for this step ({1, 8, 16, ..., budget}):
+    the RoPE positions, scatter targets and attention mask below are all
+    computed from ``cache_lens``/``valids`` per row, never from C, so rows
+    of different real widths coexist in one dispatch and a wider bucket
+    only adds masked padding columns. Per-row isolation is the page table
+    itself: a row only reads/writes its own blocks, so batching rows into
+    one dispatch cannot change any row's math.
     """
     b, C, _ = x.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim

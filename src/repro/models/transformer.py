@@ -350,13 +350,19 @@ def mixed_step_paged(params, pools: Dict, tokens, cache_lens, valids,
 
     tokens: (B, C) int32 — row b carries ``valids[b]`` real tokens (decode:
     the last sampled token at column 0; prefill: the next prompt chunk),
-    null-padded to the fixed chunk width; cache_lens/valids: (B,) int32;
-    page_tables: (B, npages) int32, null-padded. Greedy sampling happens
-    INSIDE the jit: only the last valid position of each row is unembedded
-    and argmaxed, so a single (B,) int32 vector crosses to host per step
-    instead of (B, vocab) logits. Returns (next_token_ids (B,) int32,
-    updated pools). Inactive rows (valids == 0) produce garbage ids the
-    caller ignores; their K/V writes land in the reserved null block."""
+    null-padded to the dispatch width. C itself carries no semantics beyond
+    "wide enough": the engine's token-budget packer picks it per step from
+    a bounded pow2 bucket set over the ragged per-row widths, and every
+    per-row quantity (RoPE positions, causal masking, K/V scatter targets,
+    which column is unembedded) is driven by ``valids``/``cache_lens``, so
+    the same function serves any bucket — wider C only adds masked padding
+    columns. cache_lens/valids: (B,) int32; page_tables: (B, npages) int32,
+    null-padded. Greedy sampling happens INSIDE the jit: only the last
+    valid position of each row is unembedded and argmaxed, so a single
+    (B,) int32 vector crosses to host per step instead of (B, vocab)
+    logits. Returns (next_token_ids (B,) int32, updated pools). Inactive
+    rows (valids == 0) produce garbage ids the caller ignores; their K/V
+    writes land in the reserved null block."""
     params = cast_floats(params, cfg.compute_dtype)
     x = _embed(params, tokens, cfg)
 

@@ -4,10 +4,10 @@ from repro.serving.engine import InferenceEngine, Request
 from repro.serving.paging import (BlockAllocator, EngineError,
                                   OutOfBlocksError, PageTable,
                                   PagedInferenceEngine, PagedKVCache,
-                                  PagedRequest, SwapManager)
+                                  PagedRequest, SwapManager, budget_buckets)
 
 __all__ = ["EngineBackend", "PagedEngineBackend", "SerializedPagedBackend",
            "byte_tokenize", "InferenceEngine", "Request", "BlockAllocator",
            "EngineError", "OutOfBlocksError", "PageTable",
            "PagedInferenceEngine", "PagedKVCache", "PagedRequest",
-           "SwapManager"]
+           "SwapManager", "budget_buckets"]

@@ -23,6 +23,7 @@ semantics).
 from __future__ import annotations
 
 import threading
+import zlib
 from typing import Callable
 
 import numpy as np
@@ -41,6 +42,16 @@ def byte_tokenize(text: str, vocab: int, max_len: int = 96) -> np.ndarray:
     return (toks[:max_len].astype(np.int32) % max(vocab - 2, 2)) + 1
 
 
+def _jittered_new_tokens(base: int, jitter: int, agent_id: str) -> int:
+    """Deterministic per-agent spread of generation lengths
+    (base .. base + jitter): real agent fleets do not finish turns in
+    lockstep, and the benchmark's mixed scenario needs that desync so
+    prefill genuinely overlaps decode."""
+    if not jitter:
+        return base
+    return base + zlib.crc32(agent_id.encode()) % (jitter + 1)
+
+
 class PagedEngineBackend(SteppableBackend):
     """Session surface of the paged engine for the fused dispatcher.
 
@@ -53,27 +64,37 @@ class PagedEngineBackend(SteppableBackend):
 
     PROMPT_TOKENS = 48
 
-    def __init__(self, engine, max_new_tokens: int = 12):
+    def __init__(self, engine, max_new_tokens: int = 12,
+                 prompt_tokens: int = 0, new_tokens_jitter: int = 0):
         self.engine = engine
         self.max_new_tokens = max_new_tokens
+        # prompt cap in tokens; 0 keeps the class default. Long-prompt
+        # workloads (the prefill-heavy benchmark scenario) raise it so the
+        # token-budget packer actually has multi-chunk prompts to size
+        # against — it must stay under the engine's max_len minus headroom
+        # for generations on a retained session.
+        self.prompt_tokens = prompt_tokens or self.PROMPT_TOKENS
+        # per-agent generation-length spread (see _jittered_new_tokens)
+        self.new_tokens_jitter = new_tokens_jitter
         self.sessions: dict = {}            # agent_id -> rid
         self._lock = threading.Lock()
 
     def _tokenize(self, prompt: str) -> np.ndarray:
         return byte_tokenize(prompt, self.engine.cfg.vocab_size,
-                             max_len=self.PROMPT_TOKENS)
+                             max_len=self.prompt_tokens)
 
     # --------------------------------------------- SteppableBackend
     def begin_turn(self, agent_id: str, context: str, prompt: str) -> int:
         toks = self._tokenize(prompt)
+        n_new = _jittered_new_tokens(self.max_new_tokens,
+                                     self.new_tokens_jitter, agent_id)
         with self._lock:
             rid = self.sessions.get(agent_id)
             if rid is None or rid not in self.engine.reqs:
-                rid = self.engine.submit(toks, self.max_new_tokens,
-                                         retain=True)
+                rid = self.engine.submit(toks, n_new, retain=True)
                 self.sessions[agent_id] = rid
             else:
-                self.engine.extend(rid, toks, self.max_new_tokens)
+                self.engine.extend(rid, toks, n_new)
             return rid
 
     def step(self) -> StepReport:
@@ -119,9 +140,12 @@ class PagedEngineBackend(SteppableBackend):
             return req.state not in ("parked", "swapped") or not req.done
 
     def can_admit(self, agent_id: str, prompt: str) -> bool:
+        """Gate MLFQ dequeue on the engine's *budget-aware* first-chunk
+        reservation: the engine reserves blocks only for what the first
+        dispatch can actually write (min of prompt, chunk, token budget)."""
         with self._lock:
             n = min(len(prompt.encode("utf-8", "ignore")),
-                    self.PROMPT_TOKENS)
+                    self.prompt_tokens)
             return self.engine.can_admit(max(n, 1))
 
     # ------------------------------------------- hibernation contract
@@ -148,29 +172,36 @@ class SerializedPagedBackend(ModelBackend):
     """The pre-fusion design, kept as the benchmark baseline: persistent
     paged sessions, but ``generate`` holds a backend-wide lock for the whole
     decode loop — one turn decodes at a time no matter how wide the engine's
-    batch is. The middleware runs it on the threaded lane pool."""
+    batch is. The middleware runs it on the threaded lane pool. Takes the
+    same workload knobs (``prompt_tokens``, ``new_tokens_jitter``) as
+    ``PagedEngineBackend`` so baseline comparisons run identical traffic."""
 
-    def __init__(self, engine, max_new_tokens: int = 12):
+    def __init__(self, engine, max_new_tokens: int = 12,
+                 prompt_tokens: int = 0, new_tokens_jitter: int = 0):
         self.engine = engine
         self.max_new_tokens = max_new_tokens
+        self.prompt_tokens = prompt_tokens or PagedEngineBackend.PROMPT_TOKENS
+        self.new_tokens_jitter = new_tokens_jitter
         self.sessions: dict = {}            # agent_id -> rid
         self._lock = threading.Lock()
 
     def generate(self, agent_id: str, context: str, prompt: str,
                  heartbeat: Callable[[], None],
                  cancelled: threading.Event) -> str:
-        toks = byte_tokenize(prompt, self.engine.cfg.vocab_size, max_len=48)
+        toks = byte_tokenize(prompt, self.engine.cfg.vocab_size,
+                             max_len=self.prompt_tokens)
+        n_new = _jittered_new_tokens(self.max_new_tokens,
+                                     self.new_tokens_jitter, agent_id)
         with self._lock:
             rid = self.sessions.get(agent_id)
             if rid is None or rid not in self.engine.reqs:
-                rid = self.engine.submit(toks, self.max_new_tokens,
-                                         retain=True)
+                rid = self.engine.submit(toks, n_new, retain=True)
                 self.sessions[agent_id] = rid
             else:
-                self.engine.extend(rid, toks, self.max_new_tokens)
+                self.engine.extend(rid, toks, n_new)
             out = None
             try:
-                for _ in range(len(toks) + self.max_new_tokens + 8):
+                for _ in range(len(toks) + n_new + 8):
                     if cancelled.is_set():
                         raise ZombieKilled(
                             f"turn for {agent_id} reaped mid-decode")

@@ -13,11 +13,11 @@ from repro.serving.paging.allocator import (BlockAllocator, NULL_BLOCK,
                                             OutOfBlocksError, PageTable)
 from repro.serving.paging.engine import (EngineError,
                                          PagedInferenceEngine,
-                                         PagedRequest)
+                                         PagedRequest, budget_buckets)
 from repro.serving.paging.pool import PagedKVCache
 from repro.serving.paging.swap import SwapManager
 
 __all__ = ["BlockAllocator", "EngineError", "NULL_BLOCK",
            "OutOfBlocksError", "PageTable",
            "PagedInferenceEngine", "PagedRequest", "PagedKVCache",
-           "SwapManager"]
+           "SwapManager", "budget_buckets"]

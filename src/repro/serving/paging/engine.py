@@ -21,6 +21,17 @@ Differences from the dense ``repro.serving.engine.InferenceEngine``:
     whole batch (see DESIGN.md §10). The PR 2 loop (a dispatch per
     prefilling sequence + a decode call) survives behind ``megastep=False``
     as the benchmark baseline.
+  * With a ``token_budget`` the megastep is **stall-free** (Sarathi's
+    token-budget scheduler, DESIGN.md §11): every iteration is packed
+    decode-first (one token per decoding row), then the remaining budget
+    is split across prefilling rows as *variable-width* chunks — a lone
+    prompt burns the whole budget in one step, a full decode batch pays
+    zero chunk-width padding, and the per-iteration token count is capped
+    so prefill work can never balloon a batchmate's inter-token latency.
+    The dispatch width C is the packed maximum row width rounded up to a
+    small pow2 bucket set ({1, 8, 16, ..., budget}) so jit retraces stay
+    bounded at ``len(bucket_set)``. Unset (None) keeps the PR 3 fixed
+    two-bucket behaviour (C in {1, prefill_chunk}).
   * Sessions are first-class. A finished request may be *retained*
     (parked): its pages stay resident and evictable, and a later turn
     ``extend``s it. ``fork`` shares a session's pages copy-on-write, and
@@ -41,7 +52,8 @@ Differences from the dense ``repro.serving.engine.InferenceEngine``:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import time
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -65,6 +77,28 @@ class EngineError(RuntimeError):
     the middleware can propagate it through ``TurnHandle.result()``."""
 
 
+# minimum non-decode dispatch width: the Pallas chunk axis is padded to the
+# f32 sublane width anyway, so buckets narrower than 8 would retrace without
+# saving a single FLOP
+_MIN_CHUNK_BUCKET = 8
+
+
+def budget_buckets(token_budget: int) -> Tuple[int, ...]:
+    """The bounded trace-bucket set for a token budget: {1} for pure-decode
+    iterations, then powers of two from the sublane width up to the budget
+    itself. Every megastep dispatch width is drawn from this set, so the
+    number of distinct jit traces is capped at ``len(budget_buckets(B))``
+    no matter how ragged the live workload mix is."""
+    buckets = [1]
+    w = _MIN_CHUNK_BUCKET
+    while w < token_budget:
+        buckets.append(w)
+        w *= 2
+    if token_budget > 1:
+        buckets.append(token_budget)
+    return tuple(dict.fromkeys(buckets))
+
+
 @dataclasses.dataclass(eq=False)
 class PagedRequest:
     rid: int
@@ -85,6 +119,11 @@ class PagedRequest:
     # window — extend turns write non-prompt tokens at positions that a
     # prompt-keyed index entry would misdescribe.
     fresh_turn: bool = True
+    # wall-clock latency bookkeeping for the current turn: when it was
+    # enqueued and when its previous output token landed (None before the
+    # first) — feeds the engine's TTFT / inter-token-latency samples
+    t_enqueue: float = 0.0
+    t_last_tok: Optional[float] = None
 
     @property
     def num_tokens(self) -> int:
@@ -102,6 +141,7 @@ class PagedInferenceEngine:
     def __init__(self, cfg: ModelConfig, params, *, num_blocks: int = 64,
                  block_size: int = 16, max_batch: int = 8,
                  max_len: int = 256, prefill_chunk: int = 32,
+                 token_budget: Optional[int] = None,
                  swap_store: Optional[KVSwapStore] = None,
                  megastep: bool = True):
         assert cfg.family in ("dense", "moe", "vlm"), \
@@ -112,6 +152,30 @@ class PagedInferenceEngine:
         self.max_batch = max_batch
         self.max_len = min(max_len, (num_blocks - 1) * block_size)
         self.prefill_chunk = max(1, min(prefill_chunk, self.max_len))
+        # ---- stall-free token budget (DESIGN.md §11) ---------------------
+        # token_budget caps the total tokens one megastep may process.
+        # budget >= max_batch guarantees the decode-first pack always fits
+        # every decoding row AND leaves >= 1 token for every prefilling row
+        # (n_decode + n_prefill <= max_batch <= budget), so no active row
+        # ever starves. None keeps the PR 3 fixed-chunk behaviour.
+        if token_budget is not None:
+            if token_budget < max_batch:
+                raise ValueError(
+                    f"token_budget {token_budget} < max_batch {max_batch}: "
+                    "the decode-first pack needs one token per batch row "
+                    "to keep every active sequence stall-free")
+            token_budget = min(token_budget, self.max_len)
+            self.bucket_set = budget_buckets(token_budget)
+        else:
+            # legacy two-bucket megastep: C in {1, prefill_chunk}
+            self.bucket_set = tuple(
+                dict.fromkeys((1, self.prefill_chunk)))
+        self.token_budget = token_budget
+        # admission reserves blocks for the FIRST dispatch's worth of prompt
+        # only; with a budget smaller than the chunk that is the budget —
+        # reserving chunk-width blocks would over-reserve (issue #4 sat. 1)
+        self.first_chunk_cap = (min(self.prefill_chunk, token_budget)
+                                if token_budget else self.prefill_chunk)
         self.cache = PagedKVCache(cfg, num_blocks, block_size)
         self.swap = SwapManager(self.cache, swap_store,
                                 on_evict=self._on_evicted)
@@ -134,6 +198,20 @@ class PagedInferenceEngine:
         # the megastep invariant is jit_dispatches_per_step == 1.0
         self.jit_dispatches = 0
         self.steps_dispatched = 0
+        # trace-bucket / padding accounting: every distinct megastep width C
+        # is one XLA retrace, so len(trace_buckets) <= len(bucket_set) is
+        # the recompile guard the CI smoke asserts. tokens_real counts
+        # tokens the workload actually needed; tokens_dispatched counts the
+        # (rows x width) token slots each jitted call paid FLOPs for —
+        # their gap is the padding the budget packer exists to shrink.
+        self.trace_buckets: set = set()
+        self.compiled_buckets: set = set()   # pre-traced by compile_buckets
+        self.tokens_real = 0
+        self.tokens_dispatched = 0
+        # wall-clock latency samples (seconds): time-to-first-token per
+        # turn, and the gap between consecutive output tokens of one turn
+        self.ttft_s: List[float] = []
+        self.itl_s: List[float] = []
         self.last_serviced: Dict[int, int] = {}   # rid -> tokens, last step
         # per-step casualty list: sequences the pool could not grow even
         # after reclaim (rid, reason) — aborted individually so one
@@ -155,12 +233,37 @@ class PagedInferenceEngine:
             donate_argnums=(1,))
 
     # ----------------------------------------------------------- public
+    def compile_buckets(self):
+        """Pre-trace the megastep at every bucket width so serving never
+        hits an XLA compile stall mid-traffic — the payoff of keeping the
+        dispatch widths in a small closed set. Each dummy dispatch runs
+        over all-null page tables with zero valid tokens: its K/V writes
+        land in the reserved null block and its outputs are discarded, so
+        live state is untouched. Idempotent; recorded in
+        ``compiled_buckets``, NOT in ``trace_buckets`` — the latter counts
+        only widths live traffic actually dispatched, so the benchmark's
+        buckets-used column and the recompile guard stay meaningful."""
+        if not self.use_megastep:
+            return
+        for C in self.bucket_set:
+            zeros = jnp.zeros
+            _, pools = self._mega(
+                self.params, self.cache.pools(),
+                zeros((self.max_batch, C), jnp.int32),
+                zeros((self.max_batch,), jnp.int32),
+                zeros((self.max_batch,), jnp.int32),
+                jnp.full((self.max_batch, self.max_pages), NULL_BLOCK,
+                         jnp.int32))
+            self.cache.set_pools(pools)
+            self.compiled_buckets.add(C)
+
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
                retain: bool = False) -> int:
         rid = self._next_rid
         self._next_rid += 1
         req = PagedRequest(rid, np.asarray(prompt, np.int32),
-                           max_new_tokens=max_new_tokens, retain=retain)
+                           max_new_tokens=max_new_tokens, retain=retain,
+                           t_enqueue=time.perf_counter())
         req.pending = [int(t) for t in req.prompt]
         assert len(req.pending) < self.max_len, "prompt longer than max_len"
         self.reqs[rid] = req
@@ -188,6 +291,8 @@ class PagedInferenceEngine:
         req.out_tokens = []
         req.done = False
         req.fresh_turn = False       # cache positions now diverge from prompt
+        req.t_enqueue = time.perf_counter()
+        req.t_last_tok = None        # new turn: TTFT clock restarts
         self._queue.append(req)
         return rid
 
@@ -331,10 +436,14 @@ class PagedInferenceEngine:
         """Would a fresh prompt of this length get a slot and first-chunk
         blocks right now (counting cold pages the swap tier could reclaim)?
         The fused dispatcher gates MLFQ dequeue on this, so turns are only
-        pulled when the engine can actually take them."""
+        pulled when the engine can actually take them. "First chunk" is
+        budget-aware: with a token budget smaller than ``prefill_chunk``
+        the first dispatch can write at most ``token_budget`` prompt
+        tokens, so that is all admission reserves for."""
         if len(self.free_slots) <= len(self._queue):
             return False
-        need = self.cache.pages_for(min(n_prompt_tokens, self.prefill_chunk))
+        need = self.cache.pages_for(min(n_prompt_tokens,
+                                        self.first_chunk_cap))
         return need <= self.cache.allocator.num_free + self.swap.cold_pages()
 
     def _ensure_blocks(self, n: int):
@@ -376,7 +485,7 @@ class PagedInferenceEngine:
         toks = [int(t) for t in req.prompt]
         shared = self.cache.adopt_prefix(toks)
         n_shared = len(shared) * self.cache.block_size
-        first = min(plen - n_shared, self.prefill_chunk)
+        first = min(plen - n_shared, self.first_chunk_cap)
         pt = PageTable(self.cache.block_size, shared, n_shared)
         try:
             need = self.cache.pages_for(n_shared + first) - len(shared)
@@ -428,6 +537,12 @@ class PagedInferenceEngine:
     def _finish_token(self, req: PagedRequest, tok: int,
                       finished: List[PagedRequest]):
         """Record a sampled token and retire the turn if it is complete."""
+        now = time.perf_counter()
+        if req.t_last_tok is None:
+            self.ttft_s.append(now - req.t_enqueue)
+        else:
+            self.itl_s.append(now - req.t_last_tok)
+        req.t_last_tok = now
         req.out_tokens.append(tok)
         req.last_tok = tok
         if (len(req.out_tokens) >= req.max_new_tokens
@@ -435,26 +550,85 @@ class PagedInferenceEngine:
             finished.append(req)
             self._retire(req)
 
-    def _step_megastep(self) -> List[PagedRequest]:
-        """The fused iteration: build one (max_batch, C) token matrix where
-        decode rows carry 1 valid token and prefill rows carry up to
-        ``prefill_chunk``, run ONE jitted forward over the union (K/V
-        scatter, paged attention, greedy sampling all inside), and read back
-        a single (max_batch,) int32 token vector. Decode-only iterations
-        use the C == 1 trace bucket, so pure decode never pays chunk-width
-        FLOPs; two shape buckets total, still one dispatch per step."""
-        finished: List[PagedRequest] = []
-        rows: List[tuple] = []               # (req, T) surviving growth
+    def _bucket_for(self, width: int) -> int:
+        """Smallest trace bucket >= the packed max row width."""
+        for b in self.bucket_set:
+            if b >= width:
+                return b
+        return self.bucket_set[-1]
+
+    def _pack_rows(self) -> List[tuple]:
+        """Assemble one iteration's (req, T) rows.
+
+        Without a budget this is the PR 3 fixed-chunk pack: every
+        prefilling row takes ``min(prefill_chunk, pending)``.
+
+        With a ``token_budget`` the pack is **decode-first** (DESIGN.md
+        §11): decoding rows are packed first at one token each — decode is
+        never stalled or rationed — then the remaining budget is split
+        evenly across prefilling rows (ceil-divided over the rows still
+        unpacked, so a lone prompt takes everything and k prompts take
+        ~1/k each). Because ``budget >= max_batch``, the remainder always
+        covers at least one token per prefilling row: no active row is
+        ever skipped, the total never exceeds the budget."""
+        rows: List[tuple] = []
+        budget = self.token_budget
+        if budget is None:
+            for req in list(self.active.values()):
+                if req.prefilling:
+                    T = min(self.prefill_chunk, len(req.pending))
+                    if self._grown(req, req.num_tokens + T):
+                        rows.append((req, T))
+                elif self._grown(req, req.num_tokens + 1):
+                    rows.append((req, 1))
+            return rows
+        prefilling: List[PagedRequest] = []
+        remaining = budget
         for req in list(self.active.values()):
             if req.prefilling:
-                T = min(self.prefill_chunk, len(req.pending))
-                if self._grown(req, req.num_tokens + T):
-                    rows.append((req, T))
+                prefilling.append(req)
             elif self._grown(req, req.num_tokens + 1):
                 rows.append((req, 1))
+                remaining -= 1
+        for i, req in enumerate(prefilling):
+            share = -(-remaining // (len(prefilling) - i))  # ceil-split
+            T = min(len(req.pending), remaining, max(share, 1))
+            if T <= 0:
+                continue                     # budget < max_batch impossible;
+            fallback = min(T, self.first_chunk_cap)       # defensive only
+            if T > fallback:
+                # admission only reserved first_chunk_cap blocks; a wider
+                # budget share must find its extra blocks NOW or degrade
+                # to chunk pace — never abort a turn for wanting to go
+                # faster than the reservation
+                try:
+                    self._ensure_capacity(req, req.num_tokens + T)
+                except OutOfBlocksError:
+                    T = fallback
+            if self._grown(req, req.num_tokens + T):
+                rows.append((req, T))
+                remaining -= T
+        return rows
+
+    def _step_megastep(self) -> List[PagedRequest]:
+        """The fused iteration: pack one (max_batch, C) token matrix
+        (decode-first under a token budget — see ``_pack_rows``), run ONE
+        jitted forward over the union (K/V scatter, paged attention, greedy
+        sampling all inside), and read back a single (max_batch,) int32
+        token vector. C is the packed maximum row width rounded up to the
+        bounded ``bucket_set``, so decode-only iterations use the C == 1
+        trace bucket (never paying chunk-width FLOPs) and the number of
+        distinct traced shapes stays <= len(bucket_set)."""
+        finished: List[PagedRequest] = []
+        rows = self._pack_rows()             # (req, T) surviving growth
         if not rows:
             return finished
-        C = self.prefill_chunk if any(r.prefilling for r, _ in rows) else 1
+        C = self._bucket_for(max(T for _, T in rows)) \
+            if self.token_budget else \
+            (self.prefill_chunk if any(r.prefilling for r, _ in rows) else 1)
+        self.trace_buckets.add(C)
+        self.tokens_real += sum(T for _, T in rows)
+        self.tokens_dispatched += self.max_batch * C
         toks = np.zeros((self.max_batch, C), np.int32)
         lens = np.zeros((self.max_batch,), np.int32)
         valids = np.zeros((self.max_batch,), np.int32)
@@ -520,6 +694,8 @@ class PagedInferenceEngine:
                 jnp.int32(n), jnp.int32(T), jnp.asarray(row))
             self.cache.set_pools(pools)
             self.jit_dispatches += 1
+            self.tokens_real += T
+            self.tokens_dispatched += self.prefill_chunk
             req.table.num_tokens = n + T
             del req.pending[:T]
             if req.fresh_turn:
@@ -550,6 +726,8 @@ class PagedInferenceEngine:
             self.cache.set_pools(pools)
             self.jit_dispatches += 1
             self.decode_steps += 1
+            self.tokens_real += len(decoding)
+            self.tokens_dispatched += self.max_batch
             out = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
             for req in decoding:
                 req.table.num_tokens += 1
@@ -589,6 +767,31 @@ class PagedInferenceEngine:
         """Jitted model calls per work-doing iteration — 1.0 under the
         megastep, 1 + mean(n_prefilling) under the legacy loop."""
         return self.jit_dispatches / max(self.steps_dispatched, 1)
+
+    @property
+    def padded_token_fraction(self) -> float:
+        """Share of dispatched token slots that carried padding instead of
+        real work: 1 - real / (rows x width summed over dispatches). This
+        is the FLOP overhead the budget packer's right-sized buckets exist
+        to shrink (a fixed chunk pays it on every decode row whenever any
+        batchmate is prefilling)."""
+        if not self.tokens_dispatched:
+            return 0.0
+        return 1.0 - self.tokens_real / self.tokens_dispatched
+
+    def step_stats(self) -> Dict[str, float]:
+        """Scheduling-side counters for benchmarks / the CI smoke gate."""
+        return {
+            "jit_dispatches": self.jit_dispatches,
+            "steps_dispatched": self.steps_dispatched,
+            "jit_dispatches_per_step": self.jit_dispatches_per_step,
+            "tokens_real": self.tokens_real,
+            "tokens_dispatched": self.tokens_dispatched,
+            "padded_token_fraction": self.padded_token_fraction,
+            "trace_buckets": sorted(self.trace_buckets),
+            "bucket_set": list(self.bucket_set),
+            "token_budget": self.token_budget,
+        }
 
     def sync(self):
         """Block until every dispatched pool update has materialised —

@@ -314,6 +314,83 @@ def test_fused_reaper_aborts_stalled_turn_only():
         rm.shutdown()
 
 
+class _SessionBackend(SteppableBackend):
+    """Scripted sessions: one in-flight turn per agent, park/resume, each
+    turn needs `need` serviced tokens."""
+
+    def __init__(self, need=10):
+        self.turns = {}
+        self.need = need
+        self._rid = 0
+
+    def begin_turn(self, agent_id, context, prompt):
+        self._rid += 1
+        self.turns[self._rid] = {"agent": agent_id, "tokens": 0,
+                                 "done": False}
+        return self._rid
+
+    def session_busy(self, agent_id):
+        return any(t["agent"] == agent_id and not t["done"]
+                   for t in self.turns.values())
+
+    def step(self):
+        rep = StepReport()
+        time.sleep(0.002)
+        for rid, t in self.turns.items():
+            if t["done"] or t.get("parked"):
+                continue
+            t["tokens"] += 1
+            rep.serviced[rid] = 1
+            if t["tokens"] >= self.need:
+                t["done"] = True
+                rep.finished.append(rid)
+        return rep
+
+    def collect(self, rid):
+        return f"done:{self.turns[rid]['tokens']}"
+
+    def park_turn(self, rid):
+        self.turns[rid]["parked"] = True
+
+    def resume_turn(self, rid):
+        self.turns[rid].pop("parked", None)
+
+    def abort_turn(self, rid):
+        self.turns.pop(rid, None)
+
+    def can_admit(self, agent_id, prompt):
+        return True
+
+
+def test_parked_demoted_turn_not_shadowed_by_own_successor():
+    """Livelock regression (DESIGN.md §11): agent A's turn 1 is preempted
+    mid-turn and demoted below Q0; A's turn 2 waits in Q0 with the session
+    busy. The admission scan must hold the busy successor aside and fall
+    through to resume the parked predecessor — NOT requeue the successor
+    into Q0 where it shadows the predecessor until the starvation boost
+    (starve_after here is far beyond the test timeout, so only the fix can
+    make these turns finish)."""
+    be = _SessionBackend(need=12)
+    rm = AgentRM(be, AgentRMConfig(
+        lanes=1, detect_after_s=60.0, seed=0,
+        quantum_tokens=(4.0, 8.0, 16.0),
+        allotment_tokens=(4.0, 16.0, float("inf")),
+        boost_period_s=600.0, starve_after_s=600.0))
+    try:
+        t0 = time.monotonic()
+        a1 = rm.submit("A", "turn 1")
+        b1 = rm.submit("B", "turn 1")     # waiter -> quantum preemption
+        a2 = rm.submit("A", "turn 2")     # busy-session successor in Q0
+        b2 = rm.submit("B", "turn 2")
+        for h in (a1, b1, a2, b2):
+            assert h.result(30).startswith("done:")
+        assert time.monotonic() - t0 < 20     # no 600 s boost involved
+        assert a1.turn.demotions + b1.turn.demotions >= 1
+        assert rm.monitor.snapshot().zombies_reaped == 0
+    finally:
+        rm.shutdown()
+
+
 def test_engine_error_propagates_through_handle():
     """A typed EngineError raised by the backend surfaces in
     TurnHandle.result() instead of dying in a daemon thread."""

@@ -64,6 +64,36 @@ def test_chunked_prefill_kernel_parity(C, b, hq, hkv, d, dv, npages):
                                atol=1e-5, rtol=1e-5)
 
 
+@pytest.mark.parametrize("C", [24, 64])
+def test_budget_width_kernel_parity_ragged_valids(C):
+    """The token-budget buckets instantiate the same kernel at widths far
+    beyond the old fixed chunk. Sweep wide C with fully ragged per-row
+    valids (inactive 0, decode-like 1, partial, full) and pin bitwise
+    parity against the gathered-view oracle plus fp32 agreement with the
+    quadratic ref — the masking generalizes, the page walk doesn't care."""
+    b, hq, hkv, d, dv, npages = 4, 4, 2, 32, 32, 10
+    rng = np.random.default_rng(C)
+    nb = b * npages + 1
+    q = jnp.asarray(rng.standard_normal((b, C, hq, d)), jnp.float32)
+    k_pool = jnp.asarray(rng.standard_normal((nb, BLOCK_SIZE, hkv, d)),
+                         jnp.float32)
+    v_pool = jnp.asarray(rng.standard_normal((nb, BLOCK_SIZE, hkv, dv)),
+                         jnp.float32)
+    ids = rng.permutation(np.arange(1, nb))[: b * npages].reshape(b, npages)
+    pt = jnp.asarray(ids, jnp.int32)
+    valids = np.asarray([0, 1, C // 3, C], np.int32)       # fully ragged
+    cache = np.asarray([0, 5, BLOCK_SIZE + 3,
+                        npages * BLOCK_SIZE - C], np.int32)
+    case = (q, k_pool, v_pool, jnp.asarray(cache), jnp.asarray(valids), pt)
+    out = paged_prefill_attention_bcd(*case, interpret=True)
+    oracle = paged_prefill_attention_gathered_oracle(*case)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(oracle))
+    ref = paged_prefill_attention_ref(*case)
+    live = np.asarray(valids)[:, None] > np.arange(C)[None, :]
+    np.testing.assert_allclose(np.asarray(out)[live], np.asarray(ref)[live],
+                               atol=1e-5, rtol=1e-5)
+
+
 def test_chunked_prefill_kernel_is_deterministic():
     """Two interpret runs over identical inputs are bit-identical (the
     megastep's bit-exact park/resume contract rests on this)."""
