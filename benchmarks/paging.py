@@ -109,6 +109,7 @@ def paging(seed: int = 0):
         "steps": steps,
         "jit_dispatches_per_step": round(dense.jit_dispatches_per_step, 2),
         "swap_bytes_moved": 0,
+        "dedup_ratio": 0.0,        # dense slots share nothing
     }
 
     # ---------------- paged: same byte budget, block-granular admission,
@@ -137,7 +138,11 @@ def paging(seed: int = 0):
         step_s.append(s)
         steps += n
         peak = max(peak, pk)
-    st = paged.kv_stats()
+    # kv_stats() publishes every numeric field to the unified registry as
+    # kv.* gauges; the row reads them back from there so the BENCH json and
+    # a --metrics-dump of the same run can never disagree (DESIGN.md §12)
+    paged.kv_stats()
+    g = paged.obs.metrics.gauge
     paged_row = {
         "Method": "paged-blocks",
         "kv_bytes_reserved": paged.cache.bytes_total,
@@ -147,7 +152,9 @@ def paging(seed: int = 0):
         "decode_ms": round(1e3 * sum(step_s) / len(step_s), 2),
         "steps": steps,
         "jit_dispatches_per_step": round(paged.jit_dispatches_per_step, 2),
-        "swap_bytes_moved": st["swap_bytes_out"] + st["swap_bytes_in"],
+        "swap_bytes_moved": int(g("kv.swap_bytes_out").value
+                                + g("kv.swap_bytes_in").value),
+        "dedup_ratio": round(g("kv.dedup_ratio").value, 3),
     }
 
     rows = [dense_row, paged_row]
@@ -164,7 +171,7 @@ def paging(seed: int = 0):
 def format_table(name: str, rows: List[dict]) -> str:
     hdr = ["Method", "kv_bytes_reserved", "peak_live_tokens",
            "concurrent_seqs", "hib_bytes", "decode_ms",
-           "jit_dispatches_per_step", "swap_bytes_moved"]
+           "jit_dispatches_per_step", "swap_bytes_moved", "dedup_ratio"]
     out = [f"### Paged KV cache — {name} scenario "
            "(equal device KV byte budget)"]
     out.append("| " + " | ".join(hdr) + " |")

@@ -22,6 +22,8 @@ def main() -> None:
                     help="skip the JAX paged-vs-dense engine scenario")
     ap.add_argument("--skip-sched-live", action="store_true",
                     help="skip the live fused-vs-serialized scheduling run")
+    ap.add_argument("--skip-obs", action="store_true",
+                    help="skip the tracing-overhead benchmark")
     args = ap.parse_args()
 
     csv_lines = ["name,us_per_call,derived"]
@@ -110,6 +112,28 @@ def main() -> None:
             for k, v in res["summary"].items():
                 csv_lines.append(f"sched_live_{scen}_{k},0.0,{v}x")
         print("\n[sched_live] wrote BENCH_sched_live.json")
+
+    if not args.skip_obs:
+        from benchmarks import obs as obs_bench
+        print()
+        print("=" * 72)
+        print("AgentRM benchmarks — observability "
+              "(flight-recorder overhead + trace artifact)")
+        print("=" * 72)
+        payload = obs_bench.bench_obs(seed=args.seed)
+        print(f"\n[obs] engine tokens/sec "
+              f"off={payload['engine_tokens_per_s_off']} "
+              f"on={payload['engine_tokens_per_s_on']} "
+              f"ratio={payload['overhead_ratio']} "
+              f"(floor {payload['overhead_floor']})")
+        csv_lines.append(
+            f"obs_tracing_overhead,0.0,"
+            f"ratio={payload['overhead_ratio']};"
+            f"engine_tokens_per_s_on={payload['engine_tokens_per_s_on']};"
+            f"events={payload['trace']['events']};"
+            f"dropped={payload['trace']['dropped']}")
+        print(f"[obs] trace -> {payload['trace']['path']}; "
+              "wrote BENCH_obs.json")
 
     if not args.skip_roofline:
         import os

@@ -120,12 +120,11 @@ def _drive(rm, eng, sc: dict, timeout: float = 600.0):
               (scale * sc["prompt_repeat"])).result(timeout)
     # reset EVERY reported counter after warmup so all columns describe
     # the same measurement window (buckets, dispatch ratios, padding,
-    # latency samples)
-    eng.ttft_s.clear()
-    eng.itl_s.clear()
+    # latency samples). All engine stats live in the unified registry now
+    # (DESIGN.md §12) — one reset covers counters, gauges and histograms
+    eng.obs.metrics.reset()
+    eng.obs.recorder.reset()
     eng.trace_buckets.clear()
-    eng.tokens_real = eng.tokens_dispatched = 0
-    eng.jit_dispatches = eng.steps_dispatched = eng.decode_steps = 0
     # every round is submitted up front — an agent's round-n+1 turn queues
     # behind its round-n turn (session_busy rotation), so agents desync and
     # prefill genuinely overlaps batchmates' decode instead of the whole
@@ -142,13 +141,9 @@ def _drive(rm, eng, sc: dict, timeout: float = 600.0):
     return wall, _count_tokens(outs), len(outs)
 
 
-def _p95(xs: List[float]) -> float:
-    return float(np.percentile(np.asarray(xs), 95)) if xs else 0.0
-
-
 def run_mode(cfg, params, mode: str, sc: dict, *, max_batch: int,
              num_blocks: int, block_size: int, seed: int,
-             budget: Optional[int]) -> dict:
+             budget: Optional[int], obs=None) -> dict:
     from repro.core import AgentRM, AgentRMConfig
     from repro.serving import (PagedEngineBackend, PagedInferenceEngine,
                                SerializedPagedBackend)
@@ -160,7 +155,7 @@ def run_mode(cfg, params, mode: str, sc: dict, *, max_batch: int,
         cfg, params, num_blocks=num_blocks, block_size=block_size,
         max_batch=max_batch, max_len=sc["max_len"],
         prefill_chunk=sc["chunk"], megastep=megastep,
-        token_budget=budget if mode == "fused-budget" else None)
+        token_budget=budget if mode == "fused-budget" else None, obs=obs)
     backend_cls = (SerializedPagedBackend if mode == "serialized-lanes"
                    else PagedEngineBackend)
     # every mode — including the serialized baseline — gets the exact same
@@ -179,13 +174,23 @@ def run_mode(cfg, params, mode: str, sc: dict, *, max_batch: int,
         wall, tokens, completed = _drive(rm, eng, sc)
         snap = rm.monitor.snapshot()
         st = eng.step_stats()
+        # engine-busy throughput: decoded tokens over summed in-step wall
+        # time (the registry's engine.step_s histogram). Excludes the
+        # dispatcher's idle waits and thread wakeups, so unlike wall-clock
+        # tokens_per_s it is stable at CI sizes — the obs bench gates its
+        # tracing-overhead contract on this
+        busy = eng.h_step.sum
         return {
             "Method": mode,
             "wall_s": round(wall, 2),
             "tokens": tokens,
             "tokens_per_s": round(tokens / wall, 2),
-            "ttft_p95_ms": round(_p95(eng.ttft_s) * 1e3, 1),
-            "itl_p95_ms": round(_p95(eng.itl_s) * 1e3, 1),
+            "engine_tokens_per_s": round(tokens / busy, 2) if busy else 0.0,
+            # latency quantiles come from the unified registry's histograms;
+            # the bounded reservoir keeps every sample at these run sizes,
+            # so the quantile is exact (same numbers the old raw lists gave)
+            "ttft_p95_ms": round(eng.h_ttft.quantile(0.95) * 1e3, 1),
+            "itl_p95_ms": round(eng.h_itl.quantile(0.95) * 1e3, 1),
             "padded_token_fraction": round(st["padded_token_fraction"], 3),
             "trace_buckets": st["trace_buckets"],
             "bucket_set": st["bucket_set"],
@@ -239,8 +244,9 @@ def sched_live(seed: int = 0, *, max_batch: int = 8, num_blocks: int = 193,
                              seed=seed, budget=sc["budget"])
                     for _ in range(reps)]
             agg = dict(runs[0])
-            for key in ("wall_s", "tokens_per_s", "ttft_p95_ms",
-                        "itl_p95_ms", "padded_token_fraction"):
+            for key in ("wall_s", "tokens_per_s", "engine_tokens_per_s",
+                        "ttft_p95_ms", "itl_p95_ms",
+                        "padded_token_fraction"):
                 agg[key] = round(float(np.median([r[key] for r in runs])), 3)
             agg["zombies"] = max(r["zombies"] for r in runs)
             agg["jit_dispatches_per_step"] = max(

@@ -43,6 +43,7 @@ from repro.core.context.manager import ContextLifecycleManager
 from repro.core.context.message import Message
 from repro.core.monitor import ResourceMonitor
 from repro.core.scheduler.drf import DRFAccountant
+from repro.obs import Observability
 from repro.core.scheduler.policies import (TOKEN_ALLOTMENTS, TOKEN_QUANTA,
                                            MLFQPolicy)
 from repro.core.scheduler.ratelimit import AdmissionController
@@ -160,12 +161,29 @@ class ZombieKilled(RuntimeError):
 class AgentRM:
     """The middleware resource manager."""
 
-    def __init__(self, backend, cfg: Optional[AgentRMConfig] = None):
+    def __init__(self, backend, cfg: Optional[AgentRMConfig] = None,
+                 obs: Optional[Observability] = None):
         self.backend = backend
         self.cfg = cfg or AgentRMConfig()
         self.fused = isinstance(backend, SteppableBackend)
         self.rng = random.Random(self.cfg.seed)
-        self.monitor = ResourceMonitor(lanes_total=self.cfg.lanes)
+        # observability (DESIGN.md §12): adopt the backend's engine context
+        # when none is given, so the fused stack shares ONE registry, ring
+        # and clock across engine + scheduler + monitor by default
+        self.obs = obs or getattr(backend, "obs", None) or Observability()
+        self.monitor = ResourceMonitor(lanes_total=self.cfg.lanes,
+                                       metrics=self.obs.metrics)
+        rec = self.obs.recorder
+        self._tr_mlfq = [rec.track(f"Q{lvl}", group="mlfq")
+                         for lvl in range(3)]
+        self._ev_submitted = rec.name("sched.submitted", ("tid", "level"))
+        self._ev_admitted = rec.name("sched.admitted",
+                                     ("tid", "level", "wait_s"))
+        self._ev_preempted = rec.name("sched.preempted",
+                                      ("tid", "level", "served_tokens"))
+        self._ev_demoted = rec.name("sched.demoted", ("tid", "level"))
+        self._ev_boosted = rec.name("sched.boosted", ("tid",))
+        self._ev_reaped = rec.name("sched.reaped", ("tid", "retries"))
         self.drf = DRFAccountant(self.cfg.lanes, self.cfg.token_rate)
         if self.fused:
             self.policy = MLFQPolicy(
@@ -175,6 +193,11 @@ class AgentRM:
                 starve_after=self.cfg.starve_after_s)
         else:
             self.policy = MLFQPolicy(drf=self.drf)
+        if rec.enabled:
+            # anti-starvation boosts happen inside the policy's tick; the
+            # hook routes them onto the Q0 track
+            self.policy.on_boost = lambda t: rec.instant(
+                self._ev_boosted, self._tr_mlfq[0], t.tid)
         self.admission = AdmissionController(self.cfg.token_rate,
                                              self.cfg.token_burst)
         self.clm: Dict[str, ContextLifecycleManager] = {}
@@ -199,6 +222,7 @@ class AgentRM:
         turn = Turn(agent_id=agent_id, arrival=time.monotonic(),
                     service=0.0, queue_class=queue_class, tokens=est_tokens)
         handle = TurnHandle(turn)
+        rec = self.obs.recorder
         with self._lock:
             self.handles[turn.tid] = handle
             self._prompts[turn.tid] = prompt
@@ -206,6 +230,13 @@ class AgentRM:
             self.policy.enqueue(turn, time.monotonic())
             self.monitor.on_queue_depth(int(queue_class),
                                         len(self.policy))
+            if rec.enabled:
+                # trace clock is perf_counter (the recorder's domain), kept
+                # separate from the scheduler's monotonic bookkeeping above
+                turn._trace_enq = rec.now()
+                lvl = self.policy.level_of(turn)
+                rec.instant(self._ev_submitted, self._tr_mlfq[lvl],
+                            turn.tid, lvl)
         self._wake.set()
         return handle
 
@@ -341,6 +372,11 @@ class AgentRM:
                     be.abort_turn(rec["rid"])
                 except BaseException:  # noqa: BLE001 — still fail the handle
                     pass
+                if self.obs.tracing:
+                    self.obs.recorder.instant(
+                        self._ev_reaped,
+                        self._tr_mlfq[self.policy.level_of(rec["turn"])],
+                        tid, rec["turn"].retries)
                 self._finish_fused(tid, error=ZombieKilled(
                     f"turn {tid} reaped after "
                     f"{rec['turn'].retries} retries"))
@@ -363,13 +399,24 @@ class AgentRM:
             except BaseException:  # noqa: BLE001 — leave it running
                 continue
             del self._running[tid]
+            served = rec["served_run"]
             rec["served_run"] = 0
             self._parked[tid] = rec
             self.monitor.on_lane(-1)
             self.drf.release(turn.agent_id, 1.0, turn.tokens)
             turn.state = TurnState.QUEUED
             turn._enq_at = now
+            lvl_before = self.policy.level_of(turn)
             self.policy.requeue(turn, now)
+            if self.obs.tracing:
+                trec = self.obs.recorder
+                lvl_after = self.policy.level_of(turn)
+                trec.instant(self._ev_preempted, self._tr_mlfq[lvl_before],
+                             tid, lvl_before, served)
+                if lvl_after != lvl_before:
+                    trec.instant(self._ev_demoted, self._tr_mlfq[lvl_after],
+                                 tid, lvl_after)
+                turn._trace_enq = trec.now()
 
     def _requeue_waiting(self, turn: Turn, now: float):
         """Re-queue a turn that could not be admitted — accrue this queued
@@ -377,7 +424,12 @@ class AgentRM:
         would re-age an admission-blocked turn to zero every pass."""
         turn.queue_wait += now - getattr(turn, "_enq_at", now)
         turn._enq_at = now
+        lvl_before = self.policy.level_of(turn)
         self.policy.requeue(turn, now)
+        if self.obs.tracing and self.policy.level_of(turn) != lvl_before:
+            lvl = self.policy.level_of(turn)
+            self.obs.recorder.instant(self._ev_demoted, self._tr_mlfq[lvl],
+                                      turn.tid, lvl)
 
     def _admit_from_queue(self, be, now: float):
         """Pull turns from MLFQ while the engine has capacity; gate on the
@@ -438,6 +490,12 @@ class AgentRM:
             self.monitor.on_lane(+1)
             self.drf.acquire(nxt.agent_id, 1.0, nxt.tokens)
             nxt.queue_wait += now - getattr(nxt, "_enq_at", now)
+            if self.obs.tracing:
+                trec = self.obs.recorder
+                lvl = self.policy.level_of(nxt)
+                wait = trec.now() - getattr(nxt, "_trace_enq", trec.now())
+                trec.instant(self._ev_admitted, self._tr_mlfq[lvl],
+                             nxt.tid, lvl, wait)
             nxt.state = TurnState.RUNNING
             nxt.start = nxt.start or now
             if nxt.first_wait is None:

@@ -141,6 +141,10 @@ class MLFQPolicy(Policy):
         assert len(self.allotments) == 3 and len(self.quanta) == 3
         self._last_boost = 0.0
         self._wait_since: dict = {}
+        # optional observer hook: called as on_boost(turn) for every turn
+        # the anti-starvation pass promotes/ages to the front — the fused
+        # middleware points this at its flight recorder
+        self.on_boost = None
 
     def quantum_for(self, turn: Turn) -> float:
         return self.quanta[self._level(turn)]
@@ -200,6 +204,8 @@ class MLFQPolicy(Policy):
             self.queues[lvl] = keep
         for t in promoted:
             self.queues[0].append(t)
+            if self.on_boost is not None:
+                self.on_boost(t)
         # Q0 waiters past the starvation horizon move to the front (vruntime-
         # style acknowledgement; this is what keeps Starved == 0 under load)
         aged = [t for t in self.queues[0]
@@ -208,6 +214,8 @@ class MLFQPolicy(Policy):
             rest = [t for t in self.queues[0] if t not in aged]
             for t in aged:
                 t.boosted = True
+                if self.on_boost is not None:
+                    self.on_boost(t)
             self.queues[0] = deque(aged + rest)
 
     def __len__(self):

@@ -14,6 +14,11 @@ the stall-free token-budget pack (DESIGN.md §11 — decode-first, bounded
 pow2 trace buckets). The budget is validated by the engine: it must be at
 least ``--max-batch`` so every active row makes progress every step, and
 it is clamped to ``max_len``. Unset keeps fixed-chunk megastep behaviour.
+
+``--trace-out trace.json`` records the run in the flight recorder and
+exports a Chrome trace-event file on exit (open in Perfetto / about:
+tracing); ``--metrics-dump metrics.json`` writes the unified registry
+snapshot. See DESIGN.md §12 and the README "tracing a run" walkthrough.
 """
 from __future__ import annotations
 
@@ -26,11 +31,23 @@ from repro.configs import get_config, get_smoke_config
 from repro.core import AgentRM, AgentRMConfig
 from repro.core.scheduler.task import QueueClass
 from repro.models import build
+from repro.obs import Observability, TraceConfig
 from repro.serving import (EngineBackend, InferenceEngine,
                            PagedEngineBackend, PagedInferenceEngine)
 
 
-def build_backend(cfg, params, args):
+def build_obs(args) -> Observability:
+    """Observability context from CLI args; validation errors surface as
+    CLI errors, same pattern as --token-budget."""
+    try:
+        trace = TraceConfig(enabled=bool(args.trace_out),
+                            capacity=args.trace_capacity)
+    except ValueError as e:
+        raise SystemExit(f"invalid --trace-capacity: {e}") from e
+    return Observability(trace=trace)
+
+
+def build_backend(cfg, params, args, obs=None):
     """Engine + middleware backend from CLI args (separated for tests)."""
     if not args.paged:
         if args.token_budget:
@@ -45,7 +62,7 @@ def build_backend(cfg, params, args):
             cfg, params, num_blocks=args.num_blocks,
             block_size=args.block_size, max_batch=args.max_batch,
             max_len=args.max_len, prefill_chunk=args.prefill_chunk,
-            token_budget=args.token_budget or None)
+            token_budget=args.token_budget or None, obs=obs)
     except ValueError as e:         # budget validation, as a CLI error
         raise SystemExit(f"invalid --token-budget: {e}") from e
     # pre-trace every megastep bucket so live traffic never blocks the
@@ -53,6 +70,43 @@ def build_backend(cfg, params, args):
     engine.compile_buckets()
     return engine, PagedEngineBackend(engine,
                                       max_new_tokens=args.max_new_tokens)
+
+
+def print_obs_summary(obs: Observability):
+    """One-screen curated end-of-run summary from the unified registry."""
+    m = obs.metrics
+
+    def q(name, qq):
+        h = m.get(name)
+        return (h.quantile(qq) or 0.0) * 1000 if h is not None else 0.0
+
+    def c(name):
+        c_ = m.get(name)
+        return int(c_.value) if c_ is not None else 0
+
+    real, disp = c("engine.tokens_real"), c("engine.tokens_dispatched")
+    pad = 1.0 - real / disp if disp else 0.0
+    print("[serve] --- metrics (unified registry) ---")
+    print(f"[serve] ttft  p50 {q('engine.ttft_s', .5):.0f}ms  "
+          f"p95 {q('engine.ttft_s', .95):.0f}ms | "
+          f"itl p50 {q('engine.itl_s', .5):.1f}ms  "
+          f"p95 {q('engine.itl_s', .95):.1f}ms | "
+          f"step p50 {q('engine.step_s', .5):.1f}ms  "
+          f"p95 {q('engine.step_s', .95):.1f}ms")
+    print(f"[serve] tokens real {real} / dispatched {disp} "
+          f"(padded fraction {pad:.3f}) | "
+          f"jit dispatches {c('engine.jit_dispatches')} over "
+          f"{c('engine.steps_dispatched')} steps")
+    g_swap_out = m.get("kv.swap_bytes_out")
+    if g_swap_out is not None:
+        print(f"[serve] kv: swap out {int(g_swap_out.value)}B "
+              f"in {int(m.get('kv.swap_bytes_in').value)}B | "
+              f"zombies reaped {c('rm.zombies_reaped')} "
+              f"recovered {c('rm.recoveries')}")
+    rec = obs.recorder
+    if rec.enabled:
+        print(f"[serve] trace: {rec.recorded} events recorded, "
+              f"{rec.dropped} dropped (capacity {rec.capacity})")
 
 
 def main(argv=None) -> int:
@@ -76,15 +130,26 @@ def main(argv=None) -> int:
     ap.add_argument("--token-budget", type=int, default=0,
                     help="stall-free per-step token budget (0 = fixed "
                          "chunk); must be >= --max-batch")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable the flight recorder and export a Chrome "
+                         "trace-event JSON here on exit (Perfetto-loadable)")
+    ap.add_argument("--metrics-dump", default=None, metavar="PATH",
+                    help="write the unified metrics registry snapshot "
+                         "(JSON) here on exit")
+    ap.add_argument("--trace-capacity", type=int, default=65536,
+                    help="flight-recorder ring capacity in events "
+                         "(drop-oldest beyond this)")
     args = ap.parse_args(argv)
 
+    obs = build_obs(args)
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     cfg = cfg.replace(remat=False)
     model = build(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
-    engine, backend = build_backend(cfg, params, args)
+    engine, backend = build_backend(cfg, params, args, obs=obs)
     lanes = args.max_batch if args.paged else args.lanes
-    rm = AgentRM(backend, AgentRMConfig(lanes=lanes, detect_after_s=20.0))
+    rm = AgentRM(backend, AgentRMConfig(lanes=lanes, detect_after_s=20.0),
+                 obs=obs)
 
     t0 = time.time()
     handles = []
@@ -115,6 +180,15 @@ def main(argv=None) -> int:
         print(f"[serve] {agent_id}: ctx={clm.window_tokens} tok, "
               f"psi='{clm.psi_message()[:64]}...'")
     rm.shutdown()
+    if args.paged:
+        engine.kv_stats()   # publish kv.* gauges for the summary/dump
+    print_obs_summary(obs)
+    if args.trace_out:
+        obs.recorder.export_chrome(args.trace_out)
+        print(f"[serve] chrome trace -> {args.trace_out}")
+    if args.metrics_dump:
+        obs.metrics.dump_json(args.metrics_dump)
+        print(f"[serve] metrics snapshot -> {args.metrics_dump}")
     return 0
 
 

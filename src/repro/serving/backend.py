@@ -79,6 +79,12 @@ class PagedEngineBackend(SteppableBackend):
         self.sessions: dict = {}            # agent_id -> rid
         self._lock = threading.Lock()
 
+    @property
+    def obs(self):
+        """The engine's observability context — AgentRM adopts it when not
+        handed one, so the fused stack shares a single ring/registry/clock."""
+        return self.engine.obs
+
     def _tokenize(self, prompt: str) -> np.ndarray:
         return byte_tokenize(prompt, self.engine.cfg.vocab_size,
                              max_len=self.prompt_tokens)
@@ -184,6 +190,10 @@ class SerializedPagedBackend(ModelBackend):
         self.new_tokens_jitter = new_tokens_jitter
         self.sessions: dict = {}            # agent_id -> rid
         self._lock = threading.Lock()
+
+    @property
+    def obs(self):
+        return self.engine.obs
 
     def generate(self, agent_id: str, context: str, prompt: str,
                  heartbeat: Callable[[], None],

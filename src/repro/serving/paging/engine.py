@@ -63,6 +63,7 @@ from repro.configs.base import ModelConfig
 from repro.core.context.tiers import KVSwapStore
 from repro.models import build
 from repro.models import transformer as tr
+from repro.obs import LATENCY_BUCKETS_S, Observability
 from repro.serving.paging.allocator import (NULL_BLOCK, OutOfBlocksError,
                                             PageTable)
 from repro.serving.paging.pool import PagedKVCache
@@ -124,6 +125,10 @@ class PagedRequest:
     # first) — feeds the engine's TTFT / inter-token-latency samples
     t_enqueue: float = 0.0
     t_last_tok: Optional[float] = None
+    # start of the CURRENT admission wait (enqueue/extend/resume); unlike
+    # t_enqueue it restarts on resume so the flight recorder's queued span
+    # covers one wait episode, not the whole turn
+    t_queued: float = 0.0
 
     @property
     def num_tokens(self) -> int:
@@ -143,7 +148,8 @@ class PagedInferenceEngine:
                  max_len: int = 256, prefill_chunk: int = 32,
                  token_budget: Optional[int] = None,
                  swap_store: Optional[KVSwapStore] = None,
-                 megastep: bool = True):
+                 megastep: bool = True,
+                 obs: Optional[Observability] = None):
         assert cfg.family in ("dense", "moe", "vlm"), \
             "paged engine targets the decoder-only GQA family"
         self.cfg = cfg
@@ -192,12 +198,20 @@ class PagedInferenceEngine:
         self.free_slots = list(range(max_batch))
         self._queue: List[PagedRequest] = []
         self._next_rid = 0
-        self.decode_steps = 0
+        # ---- observability (DESIGN.md §12): one registry + flight
+        # recorder per serving stack. The registry is the SINGLE store for
+        # every engine counter below (the attributes are properties over
+        # registry metrics), so step_stats()/kv_stats()/BENCH jsons can
+        # never diverge from it. Tracing is off unless the caller's
+        # TraceConfig enables it.
+        self.obs = obs if obs is not None else Observability()
+        m = self.obs.metrics
         # dispatch accounting for the perf contract: jit_dispatches counts
         # jitted model calls, steps_dispatched counts step()s that ran any —
         # the megastep invariant is jit_dispatches_per_step == 1.0
-        self.jit_dispatches = 0
-        self.steps_dispatched = 0
+        self._c_jit = m.counter("engine.jit_dispatches")
+        self._c_steps = m.counter("engine.steps_dispatched")
+        self._c_decode_steps = m.counter("engine.decode_steps")
         # trace-bucket / padding accounting: every distinct megastep width C
         # is one XLA retrace, so len(trace_buckets) <= len(bucket_set) is
         # the recompile guard the CI smoke asserts. tokens_real counts
@@ -206,17 +220,53 @@ class PagedInferenceEngine:
         # their gap is the padding the budget packer exists to shrink.
         self.trace_buckets: set = set()
         self.compiled_buckets: set = set()   # pre-traced by compile_buckets
-        self.tokens_real = 0
-        self.tokens_dispatched = 0
-        # wall-clock latency samples (seconds): time-to-first-token per
-        # turn, and the gap between consecutive output tokens of one turn
-        self.ttft_s: List[float] = []
-        self.itl_s: List[float] = []
+        self._c_tokens_real = m.counter("engine.tokens_real")
+        self._c_tokens_disp = m.counter("engine.tokens_dispatched")
+        # wall-clock latency distributions (seconds): time-to-first-token
+        # per turn, the gap between consecutive output tokens of one turn,
+        # and host wall time around each work-doing step. Fixed log-spaced
+        # buckets + a bounded reservoir — a long-lived engine no longer
+        # grows per-token Python lists forever.
+        self.h_ttft = m.histogram("engine.ttft_s", LATENCY_BUCKETS_S,
+                                  reservoir=512)
+        self.h_itl = m.histogram("engine.itl_s", LATENCY_BUCKETS_S,
+                                 reservoir=512)
+        self.h_step = m.histogram("engine.step_s", LATENCY_BUCKETS_S,
+                                  reservoir=256)
         self.last_serviced: Dict[int, int] = {}   # rid -> tokens, last step
         # per-step casualty list: sequences the pool could not grow even
         # after reclaim (rid, reason) — aborted individually so one
         # sequence's memory pressure never takes down its batchmates
         self.last_failures: List[tuple] = []
+
+        # flight-recorder interning (once, here — the hot path only passes
+        # ints). Tracks: one engine row for megasteps, one row per batch
+        # slot, one row per session (lazily, at submit).
+        rec = self.obs.recorder
+        self._tr_step = rec.track("megastep", group="engine")
+        self._tr_rows = [rec.track(f"row {s}", group="engine rows")
+                         for s in range(max_batch)]
+        self._sess_tracks: Dict[int, int] = {}
+        self._ev_step = rec.name(
+            "engine.megastep",
+            ("C", "rows", "tokens_real", "tokens_dispatched"))
+        self._ev_legacy = rec.name("engine.step.legacy",
+                                   ("dispatches", "tokens_real"))
+        self._ev_row = rec.name("row.work", ("rid", "tokens", "prefill"))
+        self._ev_enq = rec.name("session.enqueued", ("rid", "pending"))
+        self._ev_queued = rec.name("session.queued", ("rid",))
+        self._ev_admit = rec.name("session.admitted", ("rid",))
+        self._ev_prefill = rec.name("session.prefill_chunk",
+                                    ("rid", "tokens", "cache_len"))
+        self._ev_token = rec.name("session.token", ("rid", "n_out"))
+        self._ev_park = rec.name("session.parked", ("rid",))
+        self._ev_resume = rec.name("session.resumed", ("rid",))
+        self._ev_swap_out = rec.name("session.swapped_out", ("rid",))
+        self._ev_wake = rec.name("session.woken", ("rid",))
+        self._ev_turn = rec.name("session.turn", ("rid", "out_tokens"))
+        self._ev_abort = rec.name("session.aborted", ("rid",))
+        self._ev_finish = rec.name("session.finished",
+                                   ("rid", "out_tokens"))
 
         self._decode = jax.jit(
             lambda params, pools, tok, lens, tables:
@@ -257,6 +307,15 @@ class PagedInferenceEngine:
             self.cache.set_pools(pools)
             self.compiled_buckets.add(C)
 
+    def _sess_track(self, rid: int) -> int:
+        """Per-session flight-recorder track (lazily interned; one Perfetto
+        row per session, reused across its turns)."""
+        tr = self._sess_tracks.get(rid)
+        if tr is None:
+            tr = self._sess_tracks[rid] = self.obs.recorder.track(
+                f"session {rid}", group="sessions")
+        return tr
+
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
                retain: bool = False) -> int:
         rid = self._next_rid
@@ -264,10 +323,15 @@ class PagedInferenceEngine:
         req = PagedRequest(rid, np.asarray(prompt, np.int32),
                            max_new_tokens=max_new_tokens, retain=retain,
                            t_enqueue=time.perf_counter())
+        req.t_queued = req.t_enqueue
         req.pending = [int(t) for t in req.prompt]
         assert len(req.pending) < self.max_len, "prompt longer than max_len"
         self.reqs[rid] = req
         self._queue.append(req)
+        rec = self.obs.recorder
+        if rec.enabled:
+            rec.instant(self._ev_enq, self._sess_track(rid), rid,
+                        len(req.pending))
         return rid
 
     def extend(self, rid: int, tokens: np.ndarray,
@@ -292,8 +356,13 @@ class PagedInferenceEngine:
         req.done = False
         req.fresh_turn = False       # cache positions now diverge from prompt
         req.t_enqueue = time.perf_counter()
+        req.t_queued = req.t_enqueue
         req.t_last_tok = None        # new turn: TTFT clock restarts
         self._queue.append(req)
+        rec = self.obs.recorder
+        if rec.enabled:
+            rec.instant(self._ev_enq, self._sess_track(rid), rid,
+                        len(req.pending))
         return rid
 
     def fork(self, rid: int) -> int:
@@ -329,6 +398,9 @@ class PagedInferenceEngine:
         req.slot = None
         req.state = PARKED
         self.swap.mark_cold(rid, req.table)
+        rec = self.obs.recorder
+        if rec.enabled:
+            rec.instant(self._ev_park, self._sess_track(rid), rid)
 
     def resume(self, rid: int):
         """Re-queue a parked/swapped mid-turn sequence for admission; it
@@ -338,7 +410,11 @@ class PagedInferenceEngine:
             f"resume needs a parked/swapped sequence, rid {rid} is {req.state}"
         assert not req.done, f"rid {rid} has no in-flight turn to resume"
         if not any(r is req for r in self._queue):
+            req.t_queued = time.perf_counter()   # new admission-wait episode
             self._queue.append(req)
+            rec = self.obs.recorder
+            if rec.enabled:
+                rec.instant(self._ev_resume, self._sess_track(rid), rid)
 
     # ------------------------------------------------------ hibernation
     def _on_evicted(self, rid: int):
@@ -348,6 +424,9 @@ class PagedInferenceEngine:
         if req is not None:
             req.table = None
             req.state = SWAPPED
+            rec = self.obs.recorder
+            if rec.enabled:
+                rec.instant(self._ev_swap_out, self._sess_track(rid), rid)
 
     def hibernate(self, rid: int):
         """Swap a session's pages to host RAM — O(live pages)."""
@@ -370,6 +449,9 @@ class PagedInferenceEngine:
         req.table = self.swap.swap_in(rid)
         req.state = PARKED
         self.swap.mark_cold(rid, req.table)
+        rec = self.obs.recorder
+        if rec.enabled:
+            rec.instant(self._ev_wake, self._sess_track(rid), rid)
         if req.fresh_turn:
             # hibernation freed the session's old blocks (purging their
             # prefix-index entries); the rebound blocks hold the same prompt
@@ -405,6 +487,9 @@ class PagedInferenceEngine:
         req = self.reqs.get(rid)
         if req is None:
             return
+        rec = self.obs.recorder
+        if rec.enabled:
+            rec.instant(self._ev_abort, self._sess_track(rid), rid)
         self._queue = [r for r in self._queue if r is not req]
         if req.pending:
             # keep the "last_tok = next input token" invariant: everything
@@ -476,6 +561,13 @@ class PagedInferenceEngine:
             req.state = ACTIVE
             self.active[req.rid] = req
             self.swap.touch(req.rid)
+            rec = self.obs.recorder
+            if rec.enabled:
+                tr = self._sess_track(req.rid)
+                # the queued span covers this admission-wait episode
+                # (enqueue/extend/resume -> slot granted)
+                rec.complete(self._ev_queued, tr, req.t_queued, req.rid)
+                rec.instant(self._ev_admit, tr, req.rid)
 
     def _admit_fresh(self, req: PagedRequest):
         """Admission costs blocks for the *first chunk only* (minus any
@@ -518,9 +610,15 @@ class PagedInferenceEngine:
         self.last_failures = []
         if not self.active:
             return []
+        t0 = time.perf_counter()
+        before = self._c_jit.value
         if self.use_megastep:
-            return self._step_megastep()
-        return self._step_legacy()
+            fins = self._step_megastep(t0)
+        else:
+            fins = self._step_legacy(t0)
+        if self._c_jit.value != before:     # a work-doing iteration
+            self.h_step.observe(time.perf_counter() - t0)
+        return fins
 
     def _grown(self, req: PagedRequest, n_tokens: int) -> bool:
         """Per-sequence OOM isolation: if the pool cannot grow this
@@ -539,15 +637,27 @@ class PagedInferenceEngine:
         """Record a sampled token and retire the turn if it is complete."""
         now = time.perf_counter()
         if req.t_last_tok is None:
-            self.ttft_s.append(now - req.t_enqueue)
+            self.h_ttft.observe(now - req.t_enqueue)
         else:
-            self.itl_s.append(now - req.t_last_tok)
+            self.h_itl.observe(now - req.t_last_tok)
         req.t_last_tok = now
         req.out_tokens.append(tok)
         req.last_tok = tok
+        rec = self.obs.recorder
+        if rec.enabled:
+            rec.instant(self._ev_token, self._sess_track(req.rid),
+                        req.rid, len(req.out_tokens))
         if (len(req.out_tokens) >= req.max_new_tokens
                 or req.num_tokens >= self.max_len - 1):
             finished.append(req)
+            if rec.enabled:
+                tr = self._sess_track(req.rid)
+                # the turn span covers enqueue -> last token, the whole
+                # session lifecycle visible as one Perfetto slice
+                rec.complete(self._ev_turn, tr, req.t_enqueue, req.rid,
+                             len(req.out_tokens))
+                rec.instant(self._ev_finish, tr, req.rid,
+                            len(req.out_tokens))
             self._retire(req)
 
     def _bucket_for(self, width: int) -> int:
@@ -610,7 +720,7 @@ class PagedInferenceEngine:
                 remaining -= T
         return rows
 
-    def _step_megastep(self) -> List[PagedRequest]:
+    def _step_megastep(self, t0: float = 0.0) -> List[PagedRequest]:
         """The fused iteration: pack one (max_batch, C) token matrix
         (decode-first under a token budget — see ``_pack_rows``), run ONE
         jitted forward over the union (K/V scatter, paged attention, greedy
@@ -618,7 +728,13 @@ class PagedInferenceEngine:
         token vector. C is the packed maximum row width rounded up to the
         bounded ``bucket_set``, so decode-only iterations use the C == 1
         trace bucket (never paying chunk-width FLOPs) and the number of
-        distinct traced shapes stays <= len(bucket_set)."""
+        distinct traced shapes stays <= len(bucket_set).
+
+        ``t0`` anchors the step's flight-recorder span: host wall clock
+        around the one jitted dispatch (pack -> dispatch -> int32
+        readback), annotated with C / rows / tokens — all host-available
+        already, so the one-dispatch and int32-return contracts are
+        untouched by tracing."""
         finished: List[PagedRequest] = []
         rows = self._pack_rows()             # (req, T) surviving growth
         if not rows:
@@ -627,7 +743,8 @@ class PagedInferenceEngine:
             if self.token_budget else \
             (self.prefill_chunk if any(r.prefilling for r, _ in rows) else 1)
         self.trace_buckets.add(C)
-        self.tokens_real += sum(T for _, T in rows)
+        step_real = sum(T for _, T in rows)
+        self.tokens_real += step_real
         self.tokens_dispatched += self.max_batch * C
         toks = np.zeros((self.max_batch, C), np.int32)
         lens = np.zeros((self.max_batch,), np.int32)
@@ -652,9 +769,20 @@ class PagedInferenceEngine:
         if any(not r.prefilling for r, _ in rows):
             self.decode_steps += 1
         out = np.asarray(next_tok)           # (max_batch,) int32 — the only
-        for req, T in rows:                  # per-step device->host transfer
+        rec = self.obs.recorder              # per-step device->host transfer
+        tracing = rec.enabled
+        for req, T in rows:
             was_prefilling = req.prefilling
             req.table.num_tokens += T
+            if tracing:
+                # per-engine-row occupancy span + per-session chunk span,
+                # both covering this step's host wall window
+                rec.complete(self._ev_row, self._tr_rows[req.slot], t0,
+                             req.rid, T, 1.0 if was_prefilling else 0.0)
+                if was_prefilling:
+                    rec.complete(self._ev_prefill,
+                                 self._sess_track(req.rid), t0,
+                                 req.rid, T, req.num_tokens)
             if was_prefilling:
                 del req.pending[:T]
                 if req.fresh_turn:
@@ -669,9 +797,12 @@ class PagedInferenceEngine:
                 self.last_serviced[req.rid] = \
                     self.last_serviced.get(req.rid, 0) + 1
             self._finish_token(req, int(out[req.slot]), finished)
+        if tracing:
+            rec.complete(self._ev_step, self._tr_step, t0, C, len(rows),
+                         step_real, self.max_batch * C)
         return finished
 
-    def _step_legacy(self) -> List[PagedRequest]:
+    def _step_legacy(self, t0: float = 0.0) -> List[PagedRequest]:
         """PR 2 iteration shape: one jitted ``_chunk`` call per prefilling
         sequence, then one batched ``_decode`` call — 1 + n_prefilling
         dispatches per step, full (B, vocab) logits crossing to host."""
@@ -679,6 +810,8 @@ class PagedInferenceEngine:
         decoding = [r for r in self.active.values() if not r.prefilling]
         prefilling = [r for r in self.active.values() if r.prefilling]
         dispatches_before = self.jit_dispatches
+        tokens_before = self.tokens_real
+        rec = self.obs.recorder
 
         # ---- chunked prefill: one block of prompt per sequence per step
         for req in prefilling:
@@ -689,6 +822,7 @@ class PagedInferenceEngine:
             buf = np.zeros((1, self.prefill_chunk), np.int32)
             buf[0, :T] = req.pending[:T]
             row = np.asarray(req.table.padded(self.max_pages), np.int32)
+            tc0 = time.perf_counter() if rec.enabled else 0.0
             logits, pools = self._chunk(
                 self.params, self.cache.pools(), jnp.asarray(buf),
                 jnp.int32(n), jnp.int32(T), jnp.asarray(row))
@@ -698,6 +832,9 @@ class PagedInferenceEngine:
             self.tokens_dispatched += self.prefill_chunk
             req.table.num_tokens = n + T
             del req.pending[:T]
+            if rec.enabled:
+                rec.complete(self._ev_prefill, self._sess_track(req.rid),
+                             tc0, req.rid, T, req.num_tokens)
             if req.fresh_turn:
                 # only the original prompt's write window may feed the
                 # dedup index — extend turns write non-prompt tokens
@@ -734,8 +871,12 @@ class PagedInferenceEngine:
                 self.last_serviced[req.rid] = \
                     self.last_serviced.get(req.rid, 0) + 1
                 self._finish_token(req, int(out[req.slot]), finished)
-        if self.jit_dispatches != dispatches_before:
+        dispatched = self.jit_dispatches - dispatches_before
+        if dispatched:
             self.steps_dispatched += 1
+            if rec.enabled:
+                rec.complete(self._ev_legacy, self._tr_step, t0, dispatched,
+                             self.tokens_real - tokens_before)
         return finished
 
     def _retire(self, req: PagedRequest):
@@ -762,6 +903,62 @@ class PagedInferenceEngine:
         return done
 
     # ------------------------------------------------------------ stats
+    # The historical counter attributes are registry-backed properties:
+    # every read and write goes straight to the unified metrics registry
+    # (obs.metrics), so BENCH jsons, step_stats() and the registry can
+    # never disagree. Setters exist so benchmarks can zero a measurement
+    # window (and keep `+= 1` working on the hot path).
+    @property
+    def jit_dispatches(self) -> int:
+        return int(self._c_jit.value)
+
+    @jit_dispatches.setter
+    def jit_dispatches(self, v: int):
+        self._c_jit.set(v)
+
+    @property
+    def steps_dispatched(self) -> int:
+        return int(self._c_steps.value)
+
+    @steps_dispatched.setter
+    def steps_dispatched(self, v: int):
+        self._c_steps.set(v)
+
+    @property
+    def decode_steps(self) -> int:
+        return int(self._c_decode_steps.value)
+
+    @decode_steps.setter
+    def decode_steps(self, v: int):
+        self._c_decode_steps.set(v)
+
+    @property
+    def tokens_real(self) -> int:
+        return int(self._c_tokens_real.value)
+
+    @tokens_real.setter
+    def tokens_real(self, v: int):
+        self._c_tokens_real.set(v)
+
+    @property
+    def tokens_dispatched(self) -> int:
+        return int(self._c_tokens_disp.value)
+
+    @tokens_dispatched.setter
+    def tokens_dispatched(self, v: int):
+        self._c_tokens_disp.set(v)
+
+    @property
+    def ttft_s(self) -> List[float]:
+        """Bounded TTFT samples (the histogram's reservoir) — kept as a
+        list-shaped view for tests/tools; the distribution itself lives in
+        the registry histogram ``engine.ttft_s``."""
+        return self.h_ttft.samples
+
+    @property
+    def itl_s(self) -> List[float]:
+        return self.h_itl.samples
+
     @property
     def jit_dispatches_per_step(self) -> float:
         """Jitted model calls per work-doing iteration — 1.0 under the
@@ -780,7 +977,8 @@ class PagedInferenceEngine:
         return 1.0 - self.tokens_real / self.tokens_dispatched
 
     def step_stats(self) -> Dict[str, float]:
-        """Scheduling-side counters for benchmarks / the CI smoke gate."""
+        """Scheduling-side counters for benchmarks / the CI smoke gate —
+        every number read from (or derived over) the unified registry."""
         return {
             "jit_dispatches": self.jit_dispatches,
             "steps_dispatched": self.steps_dispatched,
@@ -791,6 +989,10 @@ class PagedInferenceEngine:
             "trace_buckets": sorted(self.trace_buckets),
             "bucket_set": list(self.bucket_set),
             "token_budget": self.token_budget,
+            "ttft_p95_s": self.h_ttft.quantile(0.95),
+            "itl_p95_s": self.h_itl.quantile(0.95),
+            "step_p95_s": self.h_step.quantile(0.95),
+            "trace_events_dropped": self.obs.recorder.dropped,
         }
 
     def sync(self):
@@ -802,7 +1004,7 @@ class PagedInferenceEngine:
         alloc = self.cache.allocator
         live = sum(r.num_tokens for r in self.reqs.values()
                    if r.table is not None)
-        return {
+        stats = {
             "block_size": self.cache.block_size,
             "blocks_total": self.cache.num_blocks - 1,
             "blocks_in_use": alloc.num_used,
@@ -812,3 +1014,10 @@ class PagedInferenceEngine:
             **self.cache.prefix_stats(),
             **self.swap.stats(),
         }
+        # publish into the unified registry so metrics dumps / BENCH jsons
+        # and this dict are one derivation, never two
+        m = self.obs.metrics
+        for k, v in stats.items():
+            if isinstance(v, (int, float)):
+                m.gauge("kv." + k).set(float(v))
+        return stats
