@@ -59,7 +59,7 @@ def _best(rows, key):
     return round(float(max(r[key] for r in rows)), 2)
 
 
-def _overhead_arms(seed: int) -> tuple:
+def _overhead_arms(seed: int, tp: int = 1) -> tuple:
     """Gated tracing-overhead measurement: deterministic engine-only drive.
 
     Builds two identical engines (flight recorder off / on), compiles and
@@ -68,6 +68,12 @@ def _overhead_arms(seed: int) -> tuple:
     arm scores its fastest repeat (best-of discards one-off GC/scheduler
     stalls; with zero real overhead both bests converge to the same
     machine floor).
+
+    ``tp > 1`` runs BOTH arms under the same tensor-parallel mesh
+    (DESIGN.md §13) — the ratio still isolates tracing cost, now including
+    the per-step ``collective.psum`` instant the sharded megastep emits.
+    The caller must have forced enough devices (XLA_FLAGS) before jax
+    loaded.
 
     The drive uses a mid-size model (4L d256), NOT the tiny tier-1 smoke
     model: the overhead contract is relative to per-step model compute,
@@ -93,6 +99,14 @@ def _overhead_arms(seed: int) -> tuple:
     cfg = get_smoke_config("gemma-2b").replace(
         n_layers=4, d_model=256, n_heads=4, n_kv_heads=1, head_dim=64,
         d_ff=1024, vocab_size=1024, remat=False)
+    mesh = None
+    if tp > 1:
+        from repro.launch.mesh import make_tp_mesh
+        # MQA (hkv=1) can't shard whole KV heads — lift to 4 so the same
+        # drive runs at tp in {2, 4}; head_dim is pinned, so the model is
+        # otherwise unchanged
+        cfg = cfg.replace(n_kv_heads=4)
+        mesh = make_tp_mesh(tp)
     model = build(cfg)
     params = model.init_params(jax.random.PRNGKey(seed))
 
@@ -102,7 +116,8 @@ def _overhead_arms(seed: int) -> tuple:
     def build_engine(obs):
         eng = PagedInferenceEngine(
             cfg, params, num_blocks=193, block_size=8, max_batch=8,
-            max_len=192, prefill_chunk=16, token_budget=64, obs=obs)
+            max_len=192, prefill_chunk=16, token_budget=64, mesh=mesh,
+            obs=obs)
         eng.compile_buckets()
         return eng
 
@@ -122,7 +137,8 @@ def _overhead_arms(seed: int) -> tuple:
         return time.perf_counter() - t0
 
     eng_off = build_engine(None)
-    eng_on = build_engine(Observability(trace=TraceConfig(enabled=True)))
+    obs_on = Observability(trace=TraceConfig(enabled=True))
+    eng_on = build_engine(obs_on)
     rng = np.random.default_rng(seed)
     for eng in (eng_off, eng_on):      # first-touch warmup outside the clock
         wave(eng, rng)
@@ -153,11 +169,15 @@ def _overhead_arms(seed: int) -> tuple:
         if rep + 1 >= min_reps and ratio(t_off, t_on) >= OVERHEAD_FLOOR:
             break
     tokens = waves * n_prompts * new_tokens
+    # satellite contract: under a mesh the traced arm must have recorded
+    # the per-step collective.psum instants (proof the annotation is live)
+    psums = sum(e["name"] == "collective.psum"
+                for e in obs_on.recorder.events())
     return (round(tokens / min(t_off), 2), round(tokens / min(t_on), 2),
-            round(ratio(t_off, t_on), 3))
+            round(ratio(t_off, t_on), 3), psums)
 
 
-def bench_obs(seed: int = 0, *, smoke: bool = False) -> dict:
+def bench_obs(seed: int = 0, *, smoke: bool = False, tp: int = 1) -> dict:
     import jax
 
     from repro.configs import get_smoke_config
@@ -182,7 +202,7 @@ def bench_obs(seed: int = 0, *, smoke: bool = False) -> dict:
                         seed=seed, budget=sc["budget"], obs=obs)
 
     # gated overhead arms: deterministic engine-only drive (see docstring)
-    off_tps, on_tps, overhead_ratio = _overhead_arms(seed)
+    off_tps, on_tps, overhead_ratio, psum_events = _overhead_arms(seed, tp)
 
     # informational full-stack wall numbers through the real dispatcher —
     # too jittery to gate at CI sizes, but worth recording alongside
@@ -229,6 +249,11 @@ def bench_obs(seed: int = 0, *, smoke: bool = False) -> dict:
         "wall_tokens_per_s_on": _best(on_rows, "tokens_per_s"),
         "overhead_ratio": overhead_ratio,
         "overhead_floor": OVERHEAD_FLOOR,
+        # tp of the gated arms; collective.psum instants recorded by the
+        # traced arm — must be > 0 under a mesh, EXACTLY 0 single-device
+        # (the sharded annotation must not add events to unmeshed runs)
+        "tp": tp,
+        "psum_events": psum_events,
         "trace": traces["mixed"],          # the CI headline artifact
         "trace_scenarios": traces,
         # worst-over-repeats correctness counters across every traced run
@@ -267,11 +292,20 @@ def check(payload: dict):
             "jit calls per step (tracing must not break the megastep)")
     if payload["zombies"] != 0:
         problems.append(f"traced run reaped {payload['zombies']} zombies")
+    tp = payload.get("tp", 1)
+    if tp > 1 and payload["psum_events"] == 0:
+        problems.append(f"tp={tp} arms recorded no collective.psum "
+                        "instants (sharded megastep annotation is dead)")
+    if tp == 1 and payload["psum_events"] != 0:
+        problems.append(f"single-device arms recorded "
+                        f"{payload['psum_events']} collective.psum "
+                        "instants (must only be emitted under a mesh)")
     if problems:
         raise SystemExit("; ".join(problems))
     n = len(payload["trace_scenarios"])
     print("[obs] check passed: overhead ratio "
-          f"{payload['overhead_ratio']} >= {OVERHEAD_FLOOR}, {n}/{n} "
+          f"{payload['overhead_ratio']} >= {OVERHEAD_FLOOR} at "
+          f"tp={tp} ({payload['psum_events']} psum instants), {n}/{n} "
           "scenario traces valid (0 dropped), megastep still 1 "
           "dispatch/step under tracing")
 
@@ -283,9 +317,20 @@ def main():
                     help="tiny sizes for CI")
     ap.add_argument("--check", action="store_true",
                     help="exit non-zero on overhead/schema/drop regression")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="run the gated overhead arms under a tp-way mesh "
+                         "(forces virtual CPU devices; DESIGN.md §13)")
     args = ap.parse_args()
 
-    payload = bench_obs(seed=args.seed, smoke=args.smoke)
+    if args.tp > 1:
+        # before ANY jax import — jax reads XLA_FLAGS at import time, and
+        # everything downstream imports it lazily for exactly this
+        import os
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.tp}")
+
+    payload = bench_obs(seed=args.seed, smoke=args.smoke, tp=args.tp)
     print(f"[obs] engine tokens/sec off={payload['engine_tokens_per_s_off']}"
           f" on={payload['engine_tokens_per_s_on']} "
           f"ratio={payload['overhead_ratio']} "

@@ -64,6 +64,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 from typing import List, Optional
 
@@ -143,7 +144,7 @@ def _drive(rm, eng, sc: dict, timeout: float = 600.0):
 
 def run_mode(cfg, params, mode: str, sc: dict, *, max_batch: int,
              num_blocks: int, block_size: int, seed: int,
-             budget: Optional[int], obs=None) -> dict:
+             budget: Optional[int], obs=None, mesh=None) -> dict:
     from repro.core import AgentRM, AgentRMConfig
     from repro.serving import (PagedEngineBackend, PagedInferenceEngine,
                                SerializedPagedBackend)
@@ -155,7 +156,8 @@ def run_mode(cfg, params, mode: str, sc: dict, *, max_batch: int,
         cfg, params, num_blocks=num_blocks, block_size=block_size,
         max_batch=max_batch, max_len=sc["max_len"],
         prefill_chunk=sc["chunk"], megastep=megastep,
-        token_budget=budget if mode == "fused-budget" else None, obs=obs)
+        token_budget=budget if mode == "fused-budget" else None,
+        mesh=mesh, obs=obs)
     backend_cls = (SerializedPagedBackend if mode == "serialized-lanes"
                    else PagedEngineBackend)
     # every mode — including the serialized baseline — gets the exact same
@@ -200,6 +202,12 @@ def run_mode(cfg, params, mode: str, sc: dict, *, max_batch: int,
             "completed_turns": completed,
             "zombies": snap.zombies_reaped,
             "recoveries": snap.recoveries,
+            # sharding columns: tp=1 outside a mesh; host transfer is the
+            # per-step device->host traffic (one sampled int32 per row) and
+            # must NOT grow with tp — logits reduce inside the dispatch
+            "tp": st["tp"],
+            "host_transfer_bytes_per_step":
+                st["host_transfer_bytes_per_step"],
         }
     finally:
         rm.shutdown()
@@ -333,6 +341,160 @@ def check(results: dict, smoke: bool):
           "within the bounded pow2 set")
 
 
+# --------------------------------------------------------------- sharded
+# DESIGN.md §13: the tensor-parallel megastep scaling curve. Runs on
+# multi-device CPU by forcing virtual devices (XLA_FLAGS, set in main()
+# BEFORE jax is imported — jax reads it at import time), so this bench is
+# self-contained on any CI box. The model is a tiny f32 GQA config: f32
+# because the parity oracle is exact token equality, and the psum's
+# different reduction order costs a bf16 ulp per layer at tp>1 — enough to
+# flip a greedy argmax even though the math is right (see DESIGN.md §13).
+
+SHARDED_TPS = (1, 2, 4)
+
+
+def _sharded_cfg():
+    from repro.configs import get_smoke_config
+    # hkv=4 shards across 4 virtual devices; g=2 (8 q heads over 4 kv
+    # heads) exercises the tiled-GQA head permutation nontrivially
+    return get_smoke_config("gemma-2b").replace(
+        remat=False, n_layers=2, d_model=64, n_heads=8, n_kv_heads=4,
+        head_dim=16, d_ff=128, vocab_size=256, compute_dtype="float32")
+
+
+def _parity_tokens(cfg, params, mesh) -> List[int]:
+    """Engine-only deterministic two-turn drive (submit+retain, then
+    extend): the greedy token ids are the parity oracle across meshes."""
+    from repro.serving import PagedInferenceEngine
+
+    eng = PagedInferenceEngine(cfg, params, num_blocks=65, block_size=8,
+                               max_batch=4, max_len=96, prefill_chunk=16,
+                               token_budget=16, megastep=True, mesh=mesh)
+    rid = eng.submit(np.arange(1, 20, dtype=np.int32), max_new_tokens=8,
+                     retain=True)
+    eng.run_to_completion()
+    toks = list(eng.reqs[rid].out_tokens)
+    eng.extend(rid, np.arange(30, 38, dtype=np.int32), max_new_tokens=8)
+    eng.run_to_completion()
+    return toks + list(eng.reqs[rid].out_tokens)
+
+
+def sharded_bench(seed: int = 0, smoke: bool = False) -> dict:
+    import jax
+
+    from repro.launch.mesh import make_tp_mesh
+    from repro.models import build
+
+    if jax.device_count() < max(SHARDED_TPS):
+        raise SystemExit(
+            f"sharded bench needs {max(SHARDED_TPS)} devices, found "
+            f"{jax.device_count()} — run via `python -m "
+            "benchmarks.sched_live --sharded` (main() forces virtual CPU "
+            "devices before jax loads)")
+
+    cfg = _sharded_cfg()
+    params = build(cfg).init_params(jax.random.PRNGKey(seed))
+
+    # ---- parity oracle: single-device vs every mesh width --------------
+    ref = _parity_tokens(cfg, params, None)
+    parity = {"tokens_single": ref}
+    for tp in SHARDED_TPS:
+        toks = _parity_tokens(cfg, params, make_tp_mesh(tp))
+        parity[f"tp{tp}_tokens_equal"] = bool(toks == ref)
+
+    # ---- scaling curve through the full middleware stack ---------------
+    sc = dict(agents=4, turns=1 if smoke else 2, new_tokens=8, jitter=0,
+              prompt_tokens=32, prompt_repeat=4, budget=64, chunk=16,
+              max_len=192)
+    rows = []
+    for tp in (None,) + SHARDED_TPS:    # None = no mesh at all (baseline)
+        mesh = make_tp_mesh(tp) if tp else None
+        reps = 1 if smoke else 3
+        runs = [run_mode(cfg, params, "fused-budget", sc, max_batch=4,
+                         num_blocks=129, block_size=8, seed=seed,
+                         budget=sc["budget"], mesh=mesh)
+                for _ in range(reps)]
+        agg = dict(runs[0])
+        for key in ("wall_s", "tokens_per_s", "engine_tokens_per_s",
+                    "ttft_p95_ms", "itl_p95_ms"):
+            agg[key] = round(float(np.median([r[key] for r in runs])), 3)
+        agg["zombies"] = max(r["zombies"] for r in runs)
+        agg["jit_dispatches_per_step"] = max(
+            r["jit_dispatches_per_step"] for r in runs)
+        agg["trace_buckets"] = sorted(
+            set().union(*[set(r["trace_buckets"]) for r in runs]))
+        agg["completed_turns"] = min(r["completed_turns"] for r in runs)
+        agg["Method"] = "single-device" if tp is None else f"mesh-tp{tp}"
+        rows.append(agg)
+
+    payload = {
+        "config": {"seed": seed, "smoke": smoke,
+                   "devices": jax.device_count(),
+                   "model": {"n_layers": cfg.n_layers,
+                             "n_heads": cfg.n_heads,
+                             "n_kv_heads": cfg.n_kv_heads,
+                             "compute_dtype": cfg.compute_dtype},
+                   "scenario": sc},
+        "parity": parity,
+        "rows": rows,
+    }
+    with open("BENCH_sharded.json", "w") as f:
+        json.dump(payload, f, indent=2)
+    return payload
+
+
+def format_sharded(payload: dict) -> str:
+    hdr = ["Method", "tp", "wall_s", "tokens_per_s", "itl_p95_ms",
+           "host_transfer_bytes_per_step", "trace_buckets",
+           "jit_dispatches_per_step", "completed_turns", "zombies"]
+    out = ["### Sharded megastep — scaling curve "
+           f"({payload['config']['devices']} virtual CPU devices, f32)"]
+    out.append("| " + " | ".join(hdr) + " |")
+    out.append("|" + "---|" * len(hdr))
+    for r in payload["rows"]:
+        out.append("| " + " | ".join(str(r[h]) for h in hdr) + " |")
+    flags = [f"tp{tp}={payload['parity'][f'tp{tp}_tokens_equal']}"
+             for tp in SHARDED_TPS]
+    out.append("parity vs single-device (exact token equality): "
+               + ", ".join(flags))
+    return "\n".join(out)
+
+
+def check_sharded(payload: dict):
+    """CI gate for the sharded bench: parity and structural invariants
+    (never wall-clock ratios — virtual CPU devices time-slice one core, so
+    the tokens/sec column is a record, not a gate)."""
+    problems = []
+    for tp in SHARDED_TPS:
+        if not payload["parity"][f"tp{tp}_tokens_equal"]:
+            problems.append(f"tp={tp} tokens diverged from single-device "
+                            "(f32 parity oracle)")
+    base = payload["rows"][0]["host_transfer_bytes_per_step"]
+    for r in payload["rows"]:
+        tag = f"sharded/{r['Method']}"
+        if r["jit_dispatches_per_step"] != 1.0:
+            problems.append(f"{tag} dispatched "
+                            f"{r['jit_dispatches_per_step']} jit calls per "
+                            "step (must be exactly 1)")
+        if r["zombies"] != 0:
+            problems.append(f"{tag} reaped {r['zombies']} zombies")
+        if r["host_transfer_bytes_per_step"] != base:
+            problems.append(
+                f"{tag} host transfer {r['host_transfer_bytes_per_step']}B"
+                f"/step != single-device {base}B/step — logits must reduce "
+                "inside the dispatch")
+        extra = set(r["trace_buckets"]) - set(r["bucket_set"])
+        if extra:
+            problems.append(f"{tag} traced widths {sorted(extra)} outside "
+                            f"bucket set {r['bucket_set']}")
+    if problems:
+        raise SystemExit("; ".join(problems))
+    print("[sched_live] sharded check passed: tp in "
+          f"{list(SHARDED_TPS)} token-exact vs single-device, 1 jit "
+          "dispatch per step, host transfer flat at "
+          f"{base}B/step, 0 zombies, buckets within the pow2 set")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--seed", type=int, default=0)
@@ -342,7 +504,24 @@ def main():
     ap.add_argument("--check", action="store_true",
                     help="exit non-zero on zombie/turn/dispatch/recompile "
                          "regression")
+    ap.add_argument("--sharded", action="store_true",
+                    help="run the tensor-parallel megastep scaling bench "
+                         "on 4 forced virtual CPU devices; writes "
+                         "BENCH_sharded.json")
     args = ap.parse_args()
+
+    if args.sharded:
+        # must land before ANY jax import (jax reads XLA_FLAGS at import
+        # time) — everything above imports jax lazily for exactly this
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=4")
+        payload = sharded_bench(seed=args.seed, smoke=args.smoke)
+        print(format_sharded(payload))
+        print("[sched_live] wrote BENCH_sharded.json")
+        if args.check:
+            check_sharded(payload)
+        return
 
     results = sched_live(seed=args.seed, smoke=args.smoke)
     print(format_tables(results))

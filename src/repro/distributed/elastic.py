@@ -1,30 +1,21 @@
-"""Elastic re-mesh: restore a checkpoint onto a different mesh shape.
+"""Elastic re-mesh — placeholder module.
 
-Checkpoints store logically-unsharded arrays (repro.checkpoint), so elastic
-scaling is a placement problem: recompute the sharding rules against the new
-mesh and device_put each leaf. Rules degrade gracefully (dims that stop
-dividing the new axis sizes fall back to replication), which is what makes
-shrink-to-fewer-hosts restarts safe.
+The actual helpers (``reshard_params``, ``elastic_restore``) live in
+``repro.distributed.sharding`` now: this module used to carry its own copy
+of the placement logic, which drifted from the real pspec rules and
+confused ``param_pspec`` callers. They are re-exported here so existing
+imports keep working.
+
+What remains TO BE BUILT here (ROADMAP #2 — elastic serving fleets):
+re-meshing a LIVE serving stack, i.e. draining the paged engine, moving
+hibernated sessions' host-side KV payloads (already mesh-shape-agnostic,
+see DESIGN.md §13) to a differently-sized ``tp`` mesh, and resuming
+decode bit-exactly. The building blocks exist (``shard_serving_params``,
+``PagedInferenceEngine(mesh=...)``, the KVSwapStore hibernation format);
+the orchestration does not, yet.
 """
 from __future__ import annotations
 
-from typing import Any
+from repro.distributed.sharding import elastic_restore, reshard_params
 
-import jax
-
-from repro.configs.base import ModelConfig
-from repro.distributed.sharding import param_shardings
-
-
-def reshard_params(cfg: ModelConfig, params: Any, mesh) -> Any:
-    """Place a (host-resident) param pytree onto `mesh` under the rules."""
-    shardings = param_shardings(cfg, mesh, params)
-    return jax.tree_util.tree_map(jax.device_put, params, shardings)
-
-
-def elastic_restore(cfg: ModelConfig, checkpointer, like: Any, mesh,
-                    step=None):
-    """Restore the latest checkpoint and re-place it on a (possibly
-    different) mesh. Returns (placed_tree, step, extra)."""
-    tree, step, extra = checkpointer.restore(like, step=step)
-    return reshard_params(cfg, tree, mesh), step, extra
+__all__ = ["reshard_params", "elastic_restore"]

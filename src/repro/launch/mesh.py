@@ -19,3 +19,20 @@ def make_local_mesh():
     """1x1 mesh over whatever the host has — smoke tests / examples."""
     n = len(jax.devices())
     return jax.make_mesh((1, n), ("data", "model"))
+
+
+def make_tp_mesh(tp: int):
+    """1-D tensor-parallel mesh for the sharded serving megastep
+    (DESIGN.md §13). Raises ValueError (not a jax internal error) when the
+    host doesn't have ``tp`` devices, so launchers can surface it as a CLI
+    error. On CPU, force virtual devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` BEFORE jax
+    initialises."""
+    n = len(jax.devices())
+    if tp < 1:
+        raise ValueError(f"tp={tp} must be >= 1")
+    if tp > n:
+        raise ValueError(
+            f"tp={tp} exceeds the {n} visible device(s); on CPU set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count to fake more")
+    return jax.make_mesh((tp,), ("tp",), devices=jax.devices()[:tp])

@@ -19,6 +19,12 @@ it is clamped to ``max_len``. Unset keeps fixed-chunk megastep behaviour.
 exports a Chrome trace-event file on exit (open in Perfetto / about:
 tracing); ``--metrics-dump metrics.json`` writes the unified registry
 snapshot. See DESIGN.md §12 and the README "tracing a run" walkthrough.
+
+``--mesh tp=N`` runs the megastep tensor-parallel over an N-device mesh
+(DESIGN.md §13) — requires ``--paged``, N visible devices (on CPU force
+them with ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before
+launch) and N dividing the model's KV-head count. Mesh-shape mistakes
+surface as CLI errors here, never as shard_map tracebacks.
 """
 from __future__ import annotations
 
@@ -30,10 +36,43 @@ import jax
 from repro.configs import get_config, get_smoke_config
 from repro.core import AgentRM, AgentRMConfig
 from repro.core.scheduler.task import QueueClass
+from repro.distributed.sharding import validate_tp
+from repro.launch.mesh import make_tp_mesh
 from repro.models import build
 from repro.obs import Observability, TraceConfig
 from repro.serving import (EngineBackend, InferenceEngine,
                            PagedEngineBackend, PagedInferenceEngine)
+
+
+def parse_mesh_spec(spec: str) -> int:
+    """``tp=N`` -> N. ValueError on anything else (axis names other than
+    tp are reserved for future mesh shapes)."""
+    key, sep, val = spec.partition("=")
+    if key != "tp" or not sep:
+        raise ValueError(f"expected tp=N, got {spec!r}")
+    try:
+        return int(val)
+    except ValueError:
+        raise ValueError(f"tp must be an integer, got {val!r}") from None
+
+
+def build_mesh(cfg, args):
+    """CLI mesh validation: every mesh-shape error (bad spec, tp not
+    dividing the model's heads, not enough devices) becomes a SystemExit
+    here — same pattern as --token-budget — so the engine's shard_map
+    never traces with an invalid mesh."""
+    if not getattr(args, "mesh", None):   # older test Namespaces lack it
+        return None
+    if not args.paged:
+        raise SystemExit("--mesh requires --paged (only the megastep "
+                         "engine is sharded; the dense slot engine is "
+                         "single-device)")
+    try:
+        tp = parse_mesh_spec(args.mesh)
+        validate_tp(cfg, tp)
+        return make_tp_mesh(tp)
+    except ValueError as e:
+        raise SystemExit(f"invalid --mesh: {e}") from e
 
 
 def build_obs(args) -> Observability:
@@ -53,16 +92,21 @@ def build_backend(cfg, params, args, obs=None):
         if args.token_budget:
             raise SystemExit("--token-budget requires --paged (the dense "
                              "slot engine has no megastep to budget)")
+        if getattr(args, "mesh", None):
+            raise SystemExit("--mesh requires --paged (only the megastep "
+                             "engine is sharded; the dense slot engine is "
+                             "single-device)")
         engine = InferenceEngine(cfg, params, max_slots=args.lanes,
                                  max_len=args.max_len)
         return engine, EngineBackend(engine,
                                      max_new_tokens=args.max_new_tokens)
+    mesh = build_mesh(cfg, args)    # mesh validation, as a CLI error
     try:
         engine = PagedInferenceEngine(
             cfg, params, num_blocks=args.num_blocks,
             block_size=args.block_size, max_batch=args.max_batch,
             max_len=args.max_len, prefill_chunk=args.prefill_chunk,
-            token_budget=args.token_budget or None, obs=obs)
+            token_budget=args.token_budget or None, mesh=mesh, obs=obs)
     except ValueError as e:         # budget validation, as a CLI error
         raise SystemExit(f"invalid --token-budget: {e}") from e
     # pre-trace every megastep bucket so live traffic never blocks the
@@ -130,6 +174,10 @@ def main(argv=None) -> int:
     ap.add_argument("--token-budget", type=int, default=0,
                     help="stall-free per-step token budget (0 = fixed "
                          "chunk); must be >= --max-batch")
+    ap.add_argument("--mesh", default=None, metavar="tp=N",
+                    help="shard the megastep tensor-parallel over N "
+                         "devices (requires --paged; N must divide the "
+                         "model's KV-head count)")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="enable the flight recorder and export a Chrome "
                          "trace-event JSON here on exit (Perfetto-loadable)")
@@ -175,7 +223,9 @@ def main(argv=None) -> int:
         print(f"[serve] megastep: {st['jit_dispatches_per_step']:.2f} "
               f"dispatches/step, padded_token_fraction "
               f"{st['padded_token_fraction']:.3f}, trace buckets "
-              f"{st['trace_buckets']} (set {st['bucket_set']})")
+              f"{st['trace_buckets']} (set {st['bucket_set']}), "
+              f"tp={st['tp']}, host transfer "
+              f"{st['host_transfer_bytes_per_step']}B/step")
     for agent_id, clm in rm.clm.items():
         print(f"[serve] {agent_id}: ctx={clm.window_tokens} tok, "
               f"psi='{clm.psi_message()[:64]}...'")

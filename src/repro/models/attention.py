@@ -215,7 +215,8 @@ def gqa_prefill_chunk_paged(params, x, k_pool, v_pool, page_table, cache_len,
 
 
 def gqa_mixed_step_paged(params, x, k_pool, v_pool, page_tables, cache_lens,
-                         valids, cfg: ModelConfig, *, interpret: bool = False):
+                         valids, cfg: ModelConfig, *, interpret: bool = False,
+                         axis_name: Optional[str] = None):
     """One fused Sarathi megastep row set: every row of the ``(B, C)``
     batch is a prefill chunk — decode rows simply carry ``valids == 1`` —
     so ONE call writes every row's K/V into its pages and attends causally
@@ -234,6 +235,14 @@ def gqa_mixed_step_paged(params, x, k_pool, v_pool, page_tables, cache_lens,
     only adds masked padding columns. Per-row isolation is the page table
     itself: a row only reads/writes its own blocks, so batching rows into
     one dispatch cannot change any row's math.
+
+    Under the sharded megastep (DESIGN.md §13) this runs INSIDE shard_map
+    with per-shard views: ``cfg`` carries the LOCAL head counts
+    (``n_heads/tp``, ``n_kv_heads/tp``), the pools are this shard's KV-head
+    slice, and ``axis_name`` names the mesh axis to ``psum`` the attention
+    output over — the one collective per layer, placed after the local
+    ``o @ wo`` partial so only a (B, C, d) activation is reduced. With
+    ``axis_name=None`` (single device) the math is untouched.
     """
     b, C, _ = x.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
@@ -270,6 +279,11 @@ def gqa_mixed_step_paged(params, x, k_pool, v_pool, page_tables, cache_lens,
         o = paged_prefill_attention_ref(q, k_pool, v_pool, cache_lens,
                                         valids, page_tables, pairing=pairing)
     out = o.reshape(b, C, hq * hd) @ params["wo"]
+    if axis_name is not None:
+        # each shard contributed its head slice through its wo rows; the
+        # sum over shards completes the (B, C, d) attention output and
+        # re-replicates the residual stream on every shard
+        out = jax.lax.psum(out, axis_name)
     return out, (k_pool, v_pool)
 
 

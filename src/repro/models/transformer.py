@@ -343,7 +343,7 @@ def prefill_chunk_paged(params, pools: Dict, tokens, cache_len, valid,
 
 
 def mixed_step_paged(params, pools: Dict, tokens, cache_lens, valids,
-                     page_tables, cfg: ModelConfig):
+                     page_tables, cfg: ModelConfig, *, axis_name=None):
     """The megastep forward: ONE jitted call advances the whole mixed batch
     one engine iteration — decode rows are width-1 prefill rows (Sarathi
     batch fusion over the paged pools).
@@ -362,7 +362,14 @@ def mixed_step_paged(params, pools: Dict, tokens, cache_lens, valids,
     (B,) int32 vector crosses to host per step instead of (B, vocab)
     logits. Returns (next_token_ids (B,) int32, updated pools). Inactive
     rows (valids == 0) produce garbage ids the caller ignores; their K/V
-    writes land in the reserved null block."""
+    writes land in the reserved null block.
+
+    ``axis_name`` is set when this body runs inside the sharded megastep's
+    shard_map (DESIGN.md §13): ``cfg`` then carries per-shard head counts,
+    ``pools`` is this shard's KV-head slice, and each layer's attention
+    output is psum'd over the axis — after which the residual stream is
+    replicated again, so the final unembed + argmax are computed
+    identically on every shard with no further collective."""
     params = cast_floats(params, cfg.compute_dtype)
     x = _embed(params, tokens, cfg)
 
@@ -370,7 +377,8 @@ def mixed_step_paged(params, pools: Dict, tokens, cache_lens, valids,
         lp, kp, vp = xs
         hh = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
         a, (kp, vp) = attn_mod.gqa_mixed_step_paged(
-            lp["attn"], hh, kp, vp, page_tables, cache_lens, valids, cfg)
+            lp["attn"], hh, kp, vp, page_tables, cache_lens, valids, cfg,
+            axis_name=axis_name)
         h = h + a
         m, _, _ = _mlp_or_moe(lp, h, cfg)
         return h + m, (kp, vp)

@@ -61,6 +61,10 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.context.tiers import KVSwapStore
+from repro.distributed.sharding import (TP, kv_pool_pspec,
+                                        megastep_input_pspecs,
+                                        megastep_output_pspec,
+                                        shard_serving_params, validate_tp)
 from repro.models import build
 from repro.models import transformer as tr
 from repro.obs import LATENCY_BUCKETS_S, Observability
@@ -149,11 +153,38 @@ class PagedInferenceEngine:
                  token_budget: Optional[int] = None,
                  swap_store: Optional[KVSwapStore] = None,
                  megastep: bool = True,
+                 mesh=None,
                  obs: Optional[Observability] = None):
         assert cfg.family in ("dense", "moe", "vlm"), \
             "paged engine targets the decoder-only GQA family"
         self.cfg = cfg
         self.model = build(cfg)
+        # ---- tensor-parallel mesh (DESIGN.md §13) ------------------------
+        # mesh=None is the single-device engine, bit-for-bit the PR 3/4
+        # megastep. With a ("tp",) mesh the megastep becomes ONE
+        # shard_map-wrapped dispatch: KV pools sharded over the hkv axis,
+        # row inputs replicated, one psum per layer. Validation raises
+        # ValueError so launchers surface mesh-shape mistakes as CLI
+        # errors, never as shard_map tracebacks mid-trace.
+        self.mesh = mesh
+        if mesh is not None:
+            if TP not in dict(mesh.shape):
+                raise ValueError(
+                    f"mesh axes {tuple(mesh.axis_names)} lack the '{TP}' "
+                    "axis the sharded megastep partitions heads over")
+            if not megastep:
+                raise ValueError(
+                    "mesh requires the megastep (megastep=True): the "
+                    "legacy per-sequence dispatch loop is single-device")
+            validate_tp(cfg, mesh.shape[TP])
+        self.tp = mesh.shape[TP] if mesh is not None else 1
+        if mesh is not None:
+            # head-permute (identity at tp=1) + place under the serving
+            # rules; the pspec tree doubles as the shard_map in_specs
+            params, self._param_specs = shard_serving_params(
+                cfg, mesh, params)
+        else:
+            self._param_specs = None
         self.params = params
         self.max_batch = max_batch
         self.max_len = min(max_len, (num_blocks - 1) * block_size)
@@ -182,7 +213,7 @@ class PagedInferenceEngine:
         # reserving chunk-width blocks would over-reserve (issue #4 sat. 1)
         self.first_chunk_cap = (min(self.prefill_chunk, token_budget)
                                 if token_budget else self.prefill_chunk)
-        self.cache = PagedKVCache(cfg, num_blocks, block_size)
+        self.cache = PagedKVCache(cfg, num_blocks, block_size, mesh=mesh)
         self.swap = SwapManager(self.cache, swap_store,
                                 on_evict=self._on_evicted)
         self.max_pages = self.cache.pages_for(self.max_len)
@@ -250,6 +281,15 @@ class PagedInferenceEngine:
         self._ev_step = rec.name(
             "engine.megastep",
             ("C", "rows", "tokens_real", "tokens_dispatched"))
+        # one instant per sharded megastep: mesh shape + per-shard work +
+        # an estimate of what the per-layer attention-output psums moved —
+        # Perfetto shows TP overhead next to the megastep span. Emitted
+        # only when tp > 1, so single-device traces (and the obs
+        # overhead gate's event volume) are byte-identical to before.
+        self._tr_coll = rec.track("collectives", group="engine")
+        self._ev_psum = rec.name(
+            "collective.psum",
+            ("tp", "psums", "bytes_per_shard", "shard_tokens_dispatched"))
         self._ev_legacy = rec.name("engine.step.legacy",
                                    ("dispatches", "tokens_real"))
         self._ev_row = rec.name("row.work", ("rid", "tokens", "prefill"))
@@ -276,11 +316,41 @@ class PagedInferenceEngine:
             lambda params, pools, toks, n, t, table:
             tr.prefill_chunk_paged(params, pools, toks, n, t, table, cfg),
             donate_argnums=(1,))
-        self._mega = jax.jit(
+        self._mega = self._build_mega()
+
+    def _build_mega(self):
+        """The one-dispatch-per-iteration jit. Single device: plain jit of
+        ``mixed_step_paged``. Under a mesh: the SAME body, shard_map-
+        wrapped — params and KV pools enter as per-shard head slices
+        (``cfg`` rewritten to local head counts), row inputs replicated,
+        one psum per layer restores the residual stream, and the in-jit
+        argmax is computed identically on every shard so the out spec is
+        replicated. Still exactly one jitted dispatch per engine iteration
+        and one (max_batch,) int32 host transfer."""
+        cfg = self.cfg
+        if self.mesh is None:
+            return jax.jit(
+                lambda params, pools, toks, lens, valids, tables:
+                tr.mixed_step_paged(params, pools, toks, lens, valids,
+                                    tables, cfg),
+                donate_argnums=(1,))
+        from jax.experimental.shard_map import shard_map
+        # pin head_dim: configs that leave it 0 derive d_model // n_heads,
+        # which would silently double when the local head count halves
+        lcfg = cfg.replace(n_heads=cfg.n_heads // self.tp,
+                           n_kv_heads=cfg.n_kv_heads // self.tp,
+                           head_dim=cfg.resolved_head_dim)
+        pool_specs = {"k": kv_pool_pspec(), "v": kv_pool_pspec()}
+        body = shard_map(
             lambda params, pools, toks, lens, valids, tables:
             tr.mixed_step_paged(params, pools, toks, lens, valids, tables,
-                                cfg),
-            donate_argnums=(1,))
+                                lcfg, axis_name=TP),
+            mesh=self.mesh,
+            in_specs=(self._param_specs, pool_specs,
+                      *megastep_input_pspecs()),
+            out_specs=(megastep_output_pspec(), pool_specs),
+            check_rep=False)
+        return jax.jit(body, donate_argnums=(1,))
 
     # ----------------------------------------------------------- public
     def compile_buckets(self):
@@ -800,6 +870,15 @@ class PagedInferenceEngine:
         if tracing:
             rec.complete(self._ev_step, self._tr_step, t0, C, len(rows),
                          step_real, self.max_batch * C)
+            if self.tp > 1:
+                # what this step's collectives moved, per shard: one
+                # (B, C, d) attention-output psum per layer
+                itemsize = np.dtype(self.cfg.compute_dtype).itemsize
+                psum_bytes = (self.cfg.n_layers * self.max_batch * C
+                              * self.cfg.d_model * itemsize)
+                rec.instant(self._ev_psum, self._tr_coll, self.tp,
+                            self.cfg.n_layers, psum_bytes,
+                            self.max_batch * C)
         return finished
 
     def _step_legacy(self, t0: float = 0.0) -> List[PagedRequest]:
@@ -989,6 +1068,10 @@ class PagedInferenceEngine:
             "trace_buckets": sorted(self.trace_buckets),
             "bucket_set": list(self.bucket_set),
             "token_budget": self.token_budget,
+            "tp": self.tp,
+            # the megastep's per-step device->host traffic: one int32 per
+            # batch row (the sampled ids) — mesh or not, the same bytes
+            "host_transfer_bytes_per_step": self.max_batch * 4,
             "ttft_p95_s": self.h_ttft.quantile(0.95),
             "itl_p95_s": self.h_itl.quantile(0.95),
             "step_p95_s": self.h_step.quantile(0.95),

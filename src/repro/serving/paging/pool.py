@@ -19,6 +19,13 @@ Two extras over a plain pool:
     prefix *adopts* those blocks through the existing refcount/COW
     machinery instead of recomputing and rewriting them (vLLM-style
     automatic prefix caching). Dedup counters feed ``kv_stats``.
+
+Under a ``tp`` mesh (DESIGN.md §13) the pools are placed with their KV-head
+axis sharded — each device holds the SAME block ids for its own head
+slice, so the allocator, page tables and prefix index are completely
+mesh-oblivious. Host transfers stay mesh-shape-agnostic: ``gather``
+assembles full-``hkv`` pages on the host (a session hibernated at TP=2
+wakes at TP=4 unchanged) and ``scatter`` re-shards them on the way in.
 """
 from __future__ import annotations
 
@@ -30,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.distributed.sharding import kv_pool_pspec
 from repro.models import transformer as tr
 from repro.serving.paging.allocator import NULL_BLOCK, BlockAllocator, PageTable
 
@@ -55,13 +63,25 @@ def _pow2_pad(n: int) -> int:
 class PagedKVCache:
     """Pooled paged KV storage for the decoder-only GQA family."""
 
-    def __init__(self, cfg: ModelConfig, num_blocks: int, block_size: int):
+    def __init__(self, cfg: ModelConfig, num_blocks: int, block_size: int,
+                 mesh=None):
         self.cfg = cfg
         self.num_blocks = num_blocks
         self.block_size = block_size
+        self.mesh = mesh
         pools = tr.init_paged_pools(cfg, num_blocks, block_size)
         self.k: jax.Array = pools["k"]
         self.v: jax.Array = pools["v"]
+        if mesh is not None:
+            # head-sharded placement; page-shaped updates in _put_pages
+            # are placed the same way so the donated scatter never needs
+            # a cross-device reshard
+            sh = jax.sharding.NamedSharding(mesh, kv_pool_pspec())
+            self._page_sharding = sh
+            self.k = jax.device_put(self.k, sh)
+            self.v = jax.device_put(self.v, sh)
+        else:
+            self._page_sharding = None
         self.allocator = BlockAllocator(num_blocks)
         L, _, blk, hkv, hd = self.k.shape
         self.block_bytes = 2 * L * blk * hkv * hd * self.k.dtype.itemsize
@@ -208,10 +228,16 @@ class PagedKVCache:
                 [(0, 0)] * (k_pages.ndim - 2)
             k_pages = jnp.pad(k_pages, pad)
             v_pages = jnp.pad(v_pages, pad)
+        k_pages = jnp.asarray(k_pages, self.k.dtype)
+        v_pages = jnp.asarray(v_pages, self.v.dtype)
+        if self._page_sharding is not None:
+            # pages share the pool's (..., hkv, hd) trailing layout, so
+            # the same head-sharded spec applies; committing them here
+            # keeps the donated scatter a pure per-shard write
+            k_pages = jax.device_put(k_pages, self._page_sharding)
+            v_pages = jax.device_put(v_pages, self._page_sharding)
         self.k, self.v = _pool_put(
-            self.k, self.v, jnp.asarray(row),
-            jnp.asarray(k_pages, self.k.dtype),
-            jnp.asarray(v_pages, self.v.dtype))
+            self.k, self.v, jnp.asarray(row), k_pages, v_pages)
 
     def write_prefill(self, pt: PageTable, k_pre, v_pre):
         """Scatter prefill KV (L, plen, hkv, hd) into the sequence's blocks

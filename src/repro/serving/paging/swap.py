@@ -22,7 +22,10 @@ class SwapManager:
     def __init__(self, cache: PagedKVCache,
                  store: Optional[KVSwapStore] = None, on_evict=None):
         self.cache = cache
-        self.store = store or KVSwapStore()
+        # NOT `store or ...`: KVSwapStore defines __len__, so an EMPTY
+        # shared store is falsy and would be silently replaced — engines
+        # meant to share a hibernation tier would each get a private one
+        self.store = store if store is not None else KVSwapStore()
         # owner's bookkeeping hook: called with the key after any swap-out
         # (explicit hibernation or LRU reclaim) so request state stays true
         self.on_evict = on_evict
