@@ -341,6 +341,259 @@ def check(results: dict, smoke: bool):
           "within the bounded pow2 set")
 
 
+# ----------------------------------------------------------------- chaos
+# DESIGN.md §14: the chaos soak. Every sched_live scenario runs under a
+# seeded FaultPlan (transient step faults, hangs, poisoned rows, KV
+# squatting, swap IO errors + corruption, 429 bursts, engine crashes)
+# with the full recovery stack armed: retry/backoff, watchdog deadline,
+# KV-pressure degradation, write-ahead journal + rebuild. The gates are
+# the blast-radius contract: 0 hangs, 0 zombies, 0 lost sessions, 0
+# leaked KV blocks, every failure a typed EngineError — and with an
+# EMPTY plan the chaos-instrumented stack is bitwise identical to the
+# plain one. Emits ``BENCH_chaos.json``.
+
+CHAOS_RATES = {
+    "step_exception": 0.05, "step_hang": 0.01, "poison_row": 0.04,
+    "kv_squat": 0.03, "swap_write_error": 0.02, "swap_read_error": 0.02,
+    "swap_corrupt": 0.02, "rate_limit": 0.03, "crash": 0.01,
+}
+
+
+def _drive_chaos(rm, sc: dict, turns: int, timeout: float):
+    """Submit every round up front (same desync pattern as ``_drive``);
+    classify each turn's outcome instead of asserting success."""
+    from repro.core.middleware import ZombieKilled
+    from repro.serving.errors import EngineError
+
+    handles = [(f"agent{i}",
+                rm.submit(f"agent{i}",
+                          f"turn {turn} agent {i} — "
+                          * (sc.get("prompt_scale", 1)
+                             * (1 + i % sc["prompt_repeat"]))))
+               for turn in range(turns) for i in range(sc["agents"])]
+    done = typed = untyped = zombies = hangs = 0
+    for _, h in handles:
+        try:
+            out = h.result(timeout)
+            assert out.startswith("tok:")
+            done += 1
+        except TimeoutError:
+            hangs += 1              # the one unforgivable outcome
+        except ZombieKilled:
+            zombies += 1
+        except EngineError:
+            typed += 1
+        except BaseException:  # noqa: BLE001 — anything else is a bug
+            untyped += 1
+    return {"turns_total": len(handles), "completed": done,
+            "failed_typed": typed, "failed_untyped": untyped,
+            "zombie_failures": zombies, "hangs": hangs}
+
+
+def run_chaos_scenario(cfg, params, name: str, sc: dict, *, seed: int,
+                       smoke: bool, journal_root: str) -> dict:
+    import jax  # noqa: F401  (engines need an initialized backend)
+
+    from repro.core import AgentRM, AgentRMConfig
+    from repro.faults import ChaosBackend, FaultPlan, FaultyKVSwapStore
+    from repro.obs import Observability
+    from repro.serving import (PagedEngineBackend, PagedInferenceEngine,
+                               SessionJournal)
+
+    max_batch = sc.get("max_batch", 8 if not smoke else 4)
+    obs = Observability()           # shared across rebuilds via the factory
+    store = FaultyKVSwapStore()
+    journal = SessionJournal(os.path.join(journal_root, name))
+    # the soak runs MORE turns per retained session than the perf bench,
+    # and adds a probe turn at the end — size max_len for that (a session
+    # at capacity fails extend with a plain ValueError, which is a
+    # workload-sizing mistake, not an injected fault) and give the pool
+    # enough blocks that only the injector, never the workload itself,
+    # creates hard exhaustion
+    mult = 1 if smoke else 2
+    turns = sc["turns"] * mult
+    max_len = sc["max_len"] * (mult + 1)
+    num_blocks = sc["agents"] * ((max_len + 7) // 8 + 1) + 9
+
+    def factory():
+        return PagedInferenceEngine(
+            cfg, params, num_blocks=num_blocks, block_size=8,
+            max_batch=max_batch, max_len=max_len,
+            prefill_chunk=sc["chunk"], megastep=True,
+            swap_store=store, obs=obs)
+
+    engine = factory()
+    engine.compile_buckets()
+    inner = PagedEngineBackend(engine, max_new_tokens=sc["new_tokens"],
+                               prompt_tokens=sc["prompt_tokens"],
+                               new_tokens_jitter=sc.get("jitter", 0),
+                               journal=journal, engine_factory=factory)
+    plan = FaultPlan.generate(seed=seed + hash(name) % 1000, n_steps=5000,
+                              rates=CHAOS_RATES, hang_s=0.4)
+    chaos = ChaosBackend(inner, plan, store=store)
+    # detect_after is generous so the WATCHDOG (not the reaper) owns hung
+    # steps: a condemned-but-healthy turn would count as a zombie here
+    rm = AgentRM(chaos, AgentRMConfig(lanes=max_batch, detect_after_s=300.0,
+                                      seed=seed, step_backoff_s=0.01,
+                                      step_deadline_s=20.0), obs=obs)
+    chaos.on_rate_limit = rm.report_rate_limited
+    timeout = 180.0 if smoke else 600.0
+    t0 = time.perf_counter()
+    try:
+        row = _drive_chaos(rm, sc, turns, timeout)
+        # lost-session probe: chaos off, every agent must still complete a
+        # clean turn on its (possibly journal-restored) session. Disarm
+        # one-shot store faults the plan loaded but nothing consumed yet —
+        # they belong to the soak window, not the probe
+        chaos.plan = FaultPlan()
+        store.fail_next_put = store.fail_next_read = 0
+        lost = 0
+        for i in range(sc["agents"]):
+            try:
+                assert rm.submit(f"agent{i}",
+                                 "probe turn").result(timeout) \
+                    .startswith("tok:")
+            except BaseException:  # noqa: BLE001
+                lost += 1
+        row["lost_sessions"] = lost
+        row["zombies_reaped"] = rm.monitor.snapshot().zombies_reaped
+    finally:
+        rm.shutdown()
+    # leak audit: drop the injector's hostage blocks and every retained
+    # session — anything still allocated leaked
+    chaos.release_squat()
+    eng = inner.engine
+    for rid in list(eng.reqs):
+        eng.release(rid)
+    row["leaked_blocks"] = eng.cache.allocator.num_used
+    m = obs.metrics
+
+    def c(n):
+        cc = m.get(n)
+        return int(cc.value) if cc is not None else 0
+
+    row.update({
+        "wall_s": round(time.perf_counter() - t0, 2),
+        "injected": dict(chaos.injected),
+        "step_retries": c("rm.step_retries"),
+        "engine_rebuilds": c("rm.engine_rebuilds"),
+        "kv_degradations": c("rm.kv_degradations"),
+        "step_timeouts": c("rm.step_timeouts"),
+        "rate_limit_events": c("rm.rate_limit_events"),
+        "poisoned_rows": c("engine.poisoned_rows"),
+        "swap_corruptions_injected": store.corruptions_injected,
+        "swap_corruptions_detected": eng.swap.corruptions_detected,
+        "swap_io_faults_fired": store.io_faults_fired,
+        "journal_commits": journal.commits,
+        "journal_skipped_corrupt": journal.skipped_corrupt,
+    })
+    return row
+
+
+def _chaos_parity(cfg, params, sc: dict, *, smoke: bool) -> bool:
+    """Faults disabled, instrumentation on: the ChaosBackend-wrapped stack
+    must produce bitwise-identical tokens to the bare one."""
+    from repro.core import AgentRM, AgentRMConfig
+    from repro.faults import ChaosBackend, FaultPlan
+    from repro.serving import PagedEngineBackend, PagedInferenceEngine
+
+    max_batch = sc.get("max_batch", 8 if not smoke else 4)
+
+    def run(wrap: bool):
+        eng = PagedInferenceEngine(
+            cfg, params, num_blocks=193, block_size=8,
+            max_batch=max_batch, max_len=sc["max_len"],
+            prefill_chunk=sc["chunk"], megastep=True)
+        eng.compile_buckets()
+        be = PagedEngineBackend(eng, max_new_tokens=sc["new_tokens"],
+                                prompt_tokens=sc["prompt_tokens"],
+                                new_tokens_jitter=sc.get("jitter", 0))
+        rm = AgentRM(ChaosBackend(be, FaultPlan()) if wrap else be,
+                     AgentRMConfig(lanes=max_batch, detect_after_s=300.0))
+        try:
+            hs = [rm.submit(f"agent{i}", f"parity turn {t} agent {i} — ")
+                  for t in range(sc["turns"]) for i in range(sc["agents"])]
+            return [h.result(300) for h in hs]
+        finally:
+            rm.shutdown()
+
+    return run(False) == run(True)
+
+
+def chaos_soak(seed: int = 0, smoke: bool = False) -> dict:
+    import tempfile
+
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models import build
+
+    cfg = get_smoke_config("gemma-2b").replace(remat=False)
+    model = build(cfg)
+    params = model.init_params(jax.random.PRNGKey(seed))
+
+    scenarios = {k: dict(v) for k, v in SCENARIOS.items()}
+    if smoke:
+        for sc in scenarios.values():
+            sc["agents"] = min(sc["agents"], 4)
+            sc["turns"] = 1
+            sc["new_tokens"] = min(sc["new_tokens"], 6)
+
+    results = {}
+    with tempfile.TemporaryDirectory(prefix="chaos-journal-") as jroot:
+        for name, sc in scenarios.items():
+            results[name] = run_chaos_scenario(cfg, params, name, sc,
+                                               seed=seed, smoke=smoke,
+                                               journal_root=jroot)
+    parity = _chaos_parity(cfg, params, scenarios["mixed"], smoke=smoke)
+    payload = {
+        "config": {"seed": seed, "smoke": smoke, "rates": CHAOS_RATES},
+        "scenarios": results,
+        "parity_tokens_bitwise_identical": parity,
+    }
+    with open("BENCH_chaos.json", "w") as f:
+        json.dump(payload, f, indent=2)
+    return payload
+
+
+def format_chaos(payload: dict) -> str:
+    hdr = ["scenario", "turns_total", "completed", "failed_typed",
+           "hangs", "zombie_failures", "lost_sessions", "leaked_blocks",
+           "engine_rebuilds", "step_retries", "kv_degradations",
+           "poisoned_rows", "wall_s"]
+    out = ["### Chaos soak (seeded fault plan, DESIGN.md §14)",
+           "| " + " | ".join(hdr) + " |", "|" + "---|" * len(hdr)]
+    for name, r in payload["scenarios"].items():
+        out.append("| " + " | ".join(
+            str(r[h]) if h != "scenario" else name for h in hdr) + " |")
+    out.append(f"parity (faults off, instrumentation on): "
+               f"{payload['parity_tokens_bitwise_identical']}")
+    return "\n".join(out)
+
+
+def check_chaos(payload: dict):
+    """The blast-radius contract, as a CI gate."""
+    problems = []
+    for name, r in payload["scenarios"].items():
+        for key in ("hangs", "failed_untyped", "zombie_failures",
+                    "lost_sessions", "leaked_blocks", "zombies_reaped"):
+            if r[key] != 0:
+                problems.append(f"{name}: {key}={r[key]} (must be 0)")
+        if r["completed"] + r["failed_typed"] != r["turns_total"]:
+            problems.append(
+                f"{name}: {r['completed']} completed + "
+                f"{r['failed_typed']} typed failures != "
+                f"{r['turns_total']} turns")
+    if not payload["parity_tokens_bitwise_identical"]:
+        problems.append("chaos-instrumented tokens diverge from the plain "
+                        "stack with faults disabled")
+    if problems:
+        raise SystemExit("; ".join(problems))
+    print("[sched_live] chaos check passed: every turn completed or "
+          "failed typed, 0 hangs / zombies / lost sessions / leaked "
+          "blocks, bitwise parity with faults off")
+
+
 # --------------------------------------------------------------- sharded
 # DESIGN.md §13: the tensor-parallel megastep scaling curve. Runs on
 # multi-device CPU by forcing virtual devices (XLA_FLAGS, set in main()
@@ -508,7 +761,19 @@ def main():
                     help="run the tensor-parallel megastep scaling bench "
                          "on 4 forced virtual CPU devices; writes "
                          "BENCH_sharded.json")
+    ap.add_argument("--chaos", action="store_true",
+                    help="chaos soak: every scenario under a seeded fault "
+                         "plan with the full recovery stack armed; writes "
+                         "BENCH_chaos.json (gates with --check)")
     args = ap.parse_args()
+
+    if args.chaos:
+        payload = chaos_soak(seed=args.seed, smoke=args.smoke)
+        print(format_chaos(payload))
+        print("[sched_live] wrote BENCH_chaos.json")
+        if args.check:
+            check_chaos(payload)
+        return
 
     if args.sharded:
         # must land before ANY jax import (jax reads XLA_FLAGS at import

@@ -33,6 +33,7 @@ Context Lifecycle Manager, resource monitor.
 """
 from __future__ import annotations
 
+import queue as _queue
 import random
 import threading
 import time
@@ -133,6 +134,20 @@ class AgentRMConfig:
     allotment_tokens: tuple = TOKEN_ALLOTMENTS
     boost_period_s: float = 25.0
     starve_after_s: float = 45.0
+    # ---- fault handling (DESIGN.md §14) ------------------------------
+    # transient step faults retry in place with exponential backoff + full
+    # jitter; after `rebuild_after_failures` CONSECUTIVE failures (or one
+    # fatal fault: watchdog timeout / engine crash) the dispatcher tears
+    # down and rebuilds the engine via ``backend.rebuild()`` — journaled
+    # sessions restore bit-exactly, live turns replay through admission
+    step_backoff_s: float = 0.05
+    step_backoff_max_s: float = 1.0
+    rebuild_after_failures: int = 3
+    # watchdog deadline for one ``backend.step()`` (seconds). None (the
+    # default) calls the backend directly — zero overhead; set it and a
+    # hung megastep becomes a typed ``StepTimeoutError`` instead of a
+    # frozen dispatcher (the wedged executor thread is abandoned)
+    step_deadline_s: Optional[float] = None
 
 
 class TurnHandle:
@@ -156,6 +171,66 @@ class TurnHandle:
 
 class ZombieKilled(RuntimeError):
     pass
+
+
+class TurnCancelled(ZombieKilled):
+    """A turn aborted on the caller's initiative (``AgentRM.cancel``),
+    e.g. a gateway-side turn timeout — engine-side the abort goes through
+    the same between-steps ``abort_turn`` path as a reap, so the turn's
+    KV blocks are released, never leaked."""
+
+
+class _StepRunner:
+    """Persistent executor thread for watchdogged ``backend.step()`` calls.
+
+    The dispatcher hands the step closure to the worker and waits at most
+    ``deadline`` seconds. On timeout the worker is ABANDONED together with
+    its queues — a Python thread blocked inside XLA cannot be interrupted —
+    and a fresh worker is spawned for the next step; if the wedged one ever
+    unblocks, its result lands in an orphaned queue and is dropped, so a
+    late step can never be double-applied."""
+
+    def __init__(self):
+        self._req: Optional[_queue.Queue] = None
+        self._res: Optional[_queue.Queue] = None
+        self._thread: Optional[threading.Thread] = None
+
+    def _spawn(self):
+        self._req, self._res = _queue.Queue(), _queue.Queue()
+        self._thread = threading.Thread(
+            target=self._work, args=(self._req, self._res), daemon=True)
+        self._thread.start()
+
+    @staticmethod
+    def _work(req_q: _queue.Queue, res_q: _queue.Queue):
+        while True:
+            fn = req_q.get()
+            if fn is None:
+                return
+            try:
+                res_q.put((True, fn()))
+            except BaseException as e:  # noqa: BLE001 — relayed to caller
+                res_q.put((False, e))
+
+    def run(self, fn, deadline: float):
+        if self._thread is None or not self._thread.is_alive():
+            self._spawn()
+        self._req.put(fn)
+        try:
+            ok, val = self._res.get(timeout=deadline)
+        except _queue.Empty:
+            self._req.put(None)       # exit marker, if it ever unblocks
+            self._thread = None       # orphan the wedged worker + queues
+            raise TimeoutError(
+                f"backend step exceeded the {deadline}s watchdog deadline")
+        if ok:
+            return val
+        raise val
+
+    def stop(self):
+        if self._thread is not None and self._req is not None:
+            self._req.put(None)
+            self._thread = None
 
 
 class AgentRM:
@@ -184,6 +259,25 @@ class AgentRM:
         self._ev_demoted = rec.name("sched.demoted", ("tid", "level"))
         self._ev_boosted = rec.name("sched.boosted", ("tid",))
         self._ev_reaped = rec.name("sched.reaped", ("tid", "retries"))
+        # fault/recovery instrumentation (DESIGN.md §14): counters for every
+        # recovery mechanism plus trace instants on a dedicated track, so a
+        # chaos soak's Perfetto view shows faults next to scheduling
+        self._tr_faults = rec.track("faults", group="sched")
+        self._ev_rebuilt = rec.name("sched.engine_rebuilt", ("failures",))
+        self._ev_degraded = rec.name("sched.kv_degraded",
+                                     ("victim_tid", "for_tid"))
+        self._ev_retry = rec.name("sched.step_retry", ("failures",))
+        m = self.obs.metrics
+        self._c_retries = m.counter("rm.step_retries")
+        self._c_rebuilds = m.counter("rm.engine_rebuilds")
+        self._c_degrade = m.counter("rm.kv_degradations")
+        self._c_429 = m.counter("rm.rate_limit_events")
+        self._c_step_timeouts = m.counter("rm.step_timeouts")
+        self._consec_failures = 0
+        self._backoff = self.cfg.step_backoff_s
+        self._step_runner: Optional[_StepRunner] = None
+        self._cancelled_tids: set = set()   # cancelled while still queued
+        self._errs = None                   # lazy: repro.serving.errors
         self.drf = DRFAccountant(self.cfg.lanes, self.cfg.token_rate)
         if self.fused:
             self.policy = MLFQPolicy(
@@ -271,9 +365,57 @@ class AgentRM:
         if wake is not None:
             wake(agent_id)
 
+    def cancel(self, tid: int, reason: str = "cancelled by caller") -> bool:
+        """Abort a turn from outside the dispatcher (e.g. a gateway-side
+        turn timeout). A RUNNING turn is condemned and the dispatcher
+        aborts it engine-side between steps — its KV blocks and page-table
+        entries are released through the same ``abort_turn`` path as a
+        reap, never leaked. Parked or still-queued turns fail immediately.
+        The handle resolves to ``TurnCancelled``. Returns False when the
+        turn is unknown or already finished."""
+        with self._lock:
+            h = self.handles.get(tid)
+            if h is None or h._done.is_set():
+                return False
+            err = TurnCancelled(f"turn {tid} {reason}")
+            rec = self._running.get(tid)
+            if rec is not None:
+                rec["cancel_error"] = err
+                rec["cancelled"].set()
+                self._wake.set()
+                return True
+            rec = self._parked.pop(tid, None)
+            if rec is not None:
+                try:
+                    self.backend.abort_turn(rec["rid"])
+                except BaseException:  # noqa: BLE001 — still fail the handle
+                    pass
+                rec["turn"].state = TurnState.FAILED
+                h._finish(error=err)
+                return True
+            # still queued: the dispatcher discards it at dequeue
+            self._cancelled_tids.add(tid)
+            h._finish(error=err)
+            return True
+
+    def report_rate_limited(self, n: int = 1):
+        """Feed upstream 429s into the AIMD admission controller: the
+        admission budget multiplier halves per event (floored) and
+        recovers additively on clean admissions. Real gateway adapters and
+        the chaos injector's simulated 429 bursts share this hook."""
+        n = max(1, int(n))
+        with self._lock:
+            for _ in range(n):
+                self.admission.aimd.on_rate_limited()
+            self._c_429.inc(n)
+            self.obs.metrics.gauge("rm.aimd_multiplier").set(
+                self.admission.aimd.multiplier)
+
     def shutdown(self):
         self._stop.set()
         self._wake.set()
+        if self._step_runner is not None:
+            self._step_runner.stop()
 
     # ------------------------------------------------ shared helpers
     def _build_context(self, agent_id: str) -> str:
@@ -300,6 +442,11 @@ class AgentRM:
         The engine step runs OUTSIDE the middleware lock so ``submit`` and
         CLM calls never wait on XLA."""
         be = self.backend
+        # deferred import: repro.core must not import repro.serving at
+        # module load (backend.py imports this module) — by the time the
+        # dispatcher thread runs, the cycle cannot bite
+        from repro.serving import errors as engine_errors
+        self._errs = engine_errors
         while not self._stop.is_set():
             now = time.monotonic()
             with self._lock:
@@ -313,18 +460,12 @@ class AgentRM:
                 self._wake.clear()
                 continue
             try:
-                report = be.step()
-            except BaseException as e:  # noqa: BLE001 — engine died
-                with self._lock:
-                    for tid, rec in list(self._running.items()):
-                        # best-effort engine-side cleanup so slots/blocks are
-                        # not leaked and future turns can still admit
-                        try:
-                            be.abort_turn(rec["rid"])
-                        except BaseException:  # noqa: BLE001
-                            pass
-                        self._finish_fused(tid, error=e)
+                report = self._checked_step(be)
+            except BaseException as e:  # noqa: BLE001 — step failed
+                self._on_step_failure(be, e)
                 continue
+            self._consec_failures = 0
+            self._backoff = self.cfg.step_backoff_s
             now = time.monotonic()
             with self._lock:
                 rid_to_tid = {r["rid"]: t for t, r in self._running.items()}
@@ -352,8 +493,9 @@ class AgentRM:
                         continue
                     rec = self._running[tid]
                     if rec["cancelled"].is_set():
-                        self._finish_fused(tid, error=ZombieKilled(
-                            f"turn {tid} reaped"))
+                        self._finish_fused(
+                            tid, error=rec.get("cancel_error")
+                            or ZombieKilled(f"turn {tid} reaped"))
                         continue
                     try:
                         out = be.collect(rid)
@@ -361,6 +503,109 @@ class AgentRM:
                         self._finish_fused(tid, error=e)
                         continue
                     self._finish_fused(tid, result=out)
+
+    def _checked_step(self, be):
+        """One ``backend.step()``, optionally under the watchdog deadline.
+        ``step_deadline_s=None`` (the default) is a direct call — zero
+        overhead; with a deadline the step runs on the persistent executor
+        and a hang surfaces as a typed ``StepTimeoutError`` (fatal tier:
+        the engine is suspect, recovery tears it down)."""
+        dl = self.cfg.step_deadline_s
+        if dl is None:
+            return be.step()
+        if self._step_runner is None:
+            self._step_runner = _StepRunner()
+        try:
+            return self._step_runner.run(be.step, dl)
+        except TimeoutError as e:
+            self._c_step_timeouts.inc()
+            raise self._errs.StepTimeoutError(str(e)) from e
+
+    def _on_step_failure(self, be, e: BaseException):
+        """Classify a failed step by error class (DESIGN.md §14):
+        transient -> retry the SAME step in place with exponential backoff
+        + full jitter (turns stay admitted, nothing aborted); transient
+        beyond the consecutive-failure budget, or fatal (watchdog timeout /
+        crash / unclassified) -> teardown + rebuild."""
+        errs = self._errs
+        self._consec_failures += 1
+        if (errs.is_transient(e)
+                and self._consec_failures < self.cfg.rebuild_after_failures):
+            self._c_retries.inc()
+            if self.obs.tracing:
+                self.obs.recorder.instant(self._ev_retry, self._tr_faults,
+                                          self._consec_failures)
+            delay = self._backoff * (1.0 + self.rng.random())
+            self._backoff = min(self._backoff * 2.0,
+                                self.cfg.step_backoff_max_s)
+            self._stop.wait(delay)      # interruptible backoff
+            return
+        self._recover_or_fail(be, e)
+
+    def _recover_or_fail(self, be, e: BaseException):
+        """The K-consecutive-failures escalation: tear the engine down and
+        rebuild it from the session journal when the backend supports it
+        (``rebuild()`` True). Every journaled session resumes bit-exactly;
+        live turns — running or parked, at most the in-flight ones — are
+        requeued and replay from scratch through normal admission against
+        the restored session state. A backend without recovery gets the
+        pre-chaos behaviour: abort every running turn engine-side (blocks
+        released) and fail its handle with the typed error."""
+        errs = self._errs
+        failures = self._consec_failures
+        self._consec_failures = 0
+        self._backoff = self.cfg.step_backoff_s
+        rebuild = getattr(be, "rebuild", None)
+        rebuilt = False
+        if rebuild is not None:
+            try:
+                rebuilt = bool(rebuild())
+            except BaseException:  # noqa: BLE001 — fall back to fail-all
+                rebuilt = False
+        now = time.monotonic()
+        with self._lock:
+            if not rebuilt:
+                err = e if isinstance(e, errs.EngineError) \
+                    else errs.EngineCrashError(str(e))
+                for tid, rec in list(self._running.items()):
+                    # best-effort engine-side cleanup so slots/blocks are
+                    # not leaked and future turns can still admit
+                    try:
+                        be.abort_turn(rec["rid"])
+                    except BaseException:  # noqa: BLE001
+                        pass
+                    self._finish_fused(tid, error=err)
+                return
+            self._c_rebuilds.inc()
+            if self.obs.tracing:
+                self.obs.recorder.instant(self._ev_rebuilt, self._tr_faults,
+                                          failures)
+            for tid, rec in list(self._running.items()):
+                del self._running[tid]
+                self.monitor.on_lane(-1)
+                self.drf.release(rec["turn"].agent_id, 1.0,
+                                 rec["turn"].tokens)
+                self._replay_after_rebuild(rec, now)
+            for tid, rec in list(self._parked.items()):
+                del self._parked[tid]          # lane/DRF released at park
+                self._replay_after_rebuild(rec, now)
+
+    def _replay_after_rebuild(self, rec: dict, now: float):
+        """Requeue one live turn after an engine rebuild. Its old rid died
+        with the old engine; admission will begin a fresh turn against the
+        journal-restored session. A turn the reaper had already condemned
+        stays dead — rebuilds must not resurrect zombies."""
+        turn: Turn = rec["turn"]
+        if rec["cancelled"].is_set():
+            turn.state = TurnState.FAILED
+            self.handles[turn.tid]._finish(
+                error=rec.get("cancel_error") or ZombieKilled(
+                    f"turn {turn.tid} reaped"))
+            return
+        rec["served_run"] = 0
+        turn.state = TurnState.QUEUED
+        turn._enq_at = now
+        self.policy.requeue(turn, now)
 
     def _reap_condemned(self, be):
         """Apply the reaper's verdicts between steps: ``abort_turn`` drops
@@ -377,9 +622,10 @@ class AgentRM:
                         self._ev_reaped,
                         self._tr_mlfq[self.policy.level_of(rec["turn"])],
                         tid, rec["turn"].retries)
-                self._finish_fused(tid, error=ZombieKilled(
-                    f"turn {tid} reaped after "
-                    f"{rec['turn'].retries} retries"))
+                self._finish_fused(
+                    tid, error=rec.get("cancel_error") or ZombieKilled(
+                        f"turn {tid} reaped after "
+                        f"{rec['turn'].retries} retries"))
 
     def _preempt_over_quantum(self, be, now: float):
         """Token-quantum preemption (work-conserving: only when someone is
@@ -450,6 +696,9 @@ class AgentRM:
             nxt = self.policy.dequeue(now)
             if nxt is None:
                 break
+            if nxt.tid in self._cancelled_tids:
+                self._cancelled_tids.discard(nxt.tid)
+                continue                    # cancelled while queued: drop
             prompt = self._prompts[nxt.tid]
             resuming = nxt.tid in self._parked
             if not resuming:
@@ -458,10 +707,21 @@ class AgentRM:
                     continue
                 # a resumed turn already paid admission; only new turns are
                 # gated on engine blocks and the AIMD token bucket
-                if not be.can_admit(nxt.agent_id, prompt) \
-                        or not self.admission.admit(nxt.tokens, now):
+                if not be.can_admit(nxt.agent_id, prompt):
+                    # graceful degradation under KV pressure (§14): park
+                    # the MLFQ-lowest running victim — its pages go cold
+                    # and reclaimable, its slot frees — instead of
+                    # head-of-line stalling admission on a full pool
+                    if not (self._degrade_for_blocks(be, nxt, now)
+                            and be.can_admit(nxt.agent_id, prompt)):
+                        self._requeue_waiting(nxt, now)
+                        break
+                if not self.admission.admit(nxt.tokens, now):
                     self._requeue_waiting(nxt, now)
                     break
+                # a clean admission is the AIMD controller's additive-
+                # recovery signal (mirrors on_rate_limited's decrease)
+                self.admission.aimd.on_clean()
             if resuming:
                 rec = self._parked.pop(nxt.tid)
                 try:
@@ -504,6 +764,47 @@ class AgentRM:
                                         len(self.policy))
         for t in deferred:
             self._requeue_waiting(t, now)
+
+    def _degrade_for_blocks(self, be, nxt: Turn, now: float) -> bool:
+        """Hibernate the MLFQ-lowest running victim so its pages become
+        reclaimable cold state (park -> swap-under-pressure), freeing its
+        decode slot for the waiter. Eligibility guards against thrash and
+        priority inversion: the victim's level must be strictly below the
+        waiter's, or equal with at least one token of service this run —
+        so an admitted turn always decodes before it can itself be
+        displaced by an equal-priority waiter, and every park/admit cycle
+        makes progress. Returns True when a victim was parked."""
+        wait_lvl = self.policy.level_of(nxt)
+        victim_tid, victim_lvl = None, -1
+        for tid, rec in self._running.items():
+            if rec["cancelled"].is_set():
+                continue
+            lvl = self.policy.level_of(rec["turn"])
+            eligible = lvl > wait_lvl or (lvl == wait_lvl
+                                          and rec["served_run"] > 0)
+            if eligible and lvl > victim_lvl:
+                victim_tid, victim_lvl = tid, lvl
+        if victim_tid is None:
+            return False
+        rec = self._running[victim_tid]
+        try:
+            be.park_turn(rec["rid"])
+        except BaseException:  # noqa: BLE001 — not parkable right now
+            return False
+        del self._running[victim_tid]
+        rec["served_run"] = 0
+        self._parked[victim_tid] = rec
+        self.monitor.on_lane(-1)
+        turn: Turn = rec["turn"]
+        self.drf.release(turn.agent_id, 1.0, turn.tokens)
+        turn.state = TurnState.QUEUED
+        turn._enq_at = now
+        self.policy.requeue(turn, now)
+        self._c_degrade.inc()
+        if self.obs.tracing:
+            self.obs.recorder.instant(self._ev_degraded, self._tr_faults,
+                                      victim_tid, nxt.tid)
+        return True
 
     def _finish_fused(self, tid: int, result=None, error=None):
         """Caller holds the lock."""
@@ -592,7 +893,10 @@ class AgentRM:
         is a flag — the dispatcher applies it via ``abort_turn`` between
         engine steps; in threaded mode the worker thread observes it."""
         while not self._stop.is_set():
-            time.sleep(self.cfg.reaper_period_s)
+            # interruptible sleep: shutdown() must not wait out a full
+            # reaper period before the thread notices _stop
+            if self._stop.wait(self.cfg.reaper_period_s):
+                return
             now = time.monotonic()
             with self._lock:
                 # a record whose cancelled flag is already set has been

@@ -201,11 +201,13 @@ def kv_pool_pspec() -> P:
     return P(None, None, None, TP, None)
 
 
-def megastep_input_pspecs() -> Tuple[P, P, P, P]:
+def megastep_input_pspecs() -> Tuple[P, P, P, P, P]:
     """Megastep row inputs — ``tokens (B, C)``, ``cache_lens (B,)``,
-    ``valids (B,)``, ``page_tables (B, npages)`` — are all replicated:
-    every shard sees the full batch and computes its head slice of it."""
-    return (P(), P(), P(), P())
+    ``valids (B,)``, ``page_tables (B, npages)``, ``poison_mask (B,)`` —
+    are all replicated: every shard sees the full batch and computes its
+    head slice of it (so the in-jit finiteness sentinel, like the argmax,
+    is computed identically on every shard)."""
+    return (P(), P(), P(), P(), P())
 
 
 def megastep_output_pspec() -> P:

@@ -41,7 +41,9 @@ from repro.launch.mesh import make_tp_mesh
 from repro.models import build
 from repro.obs import Observability, TraceConfig
 from repro.serving import (EngineBackend, InferenceEngine,
-                           PagedEngineBackend, PagedInferenceEngine)
+                           PagedEngineBackend, PagedInferenceEngine,
+                           SessionJournal)
+from repro.core.middleware import TurnCancelled
 
 
 def parse_mesh_spec(spec: str) -> int:
@@ -101,19 +103,31 @@ def build_backend(cfg, params, args, obs=None):
         return engine, EngineBackend(engine,
                                      max_new_tokens=args.max_new_tokens)
     mesh = build_mesh(cfg, args)    # mesh validation, as a CLI error
-    try:
-        engine = PagedInferenceEngine(
+
+    def make_engine():
+        return PagedInferenceEngine(
             cfg, params, num_blocks=args.num_blocks,
             block_size=args.block_size, max_batch=args.max_batch,
             max_len=args.max_len, prefill_chunk=args.prefill_chunk,
             token_budget=args.token_budget or None, mesh=mesh, obs=obs)
+
+    try:
+        engine = make_engine()
     except ValueError as e:         # budget validation, as a CLI error
         raise SystemExit(f"invalid --token-budget: {e}") from e
     # pre-trace every megastep bucket so live traffic never blocks the
     # fused dispatcher (and its heartbeats) in an XLA compile
     engine.compile_buckets()
+    journal = factory = None
+    if getattr(args, "journal_dir", None):
+        # crash-safe recovery (DESIGN.md §14): committed turns journal to
+        # disk; a fatal engine fault rebuilds via the factory and restores
+        journal = SessionJournal(args.journal_dir)
+        factory = make_engine
     return engine, PagedEngineBackend(engine,
-                                      max_new_tokens=args.max_new_tokens)
+                                      max_new_tokens=args.max_new_tokens,
+                                      journal=journal,
+                                      engine_factory=factory)
 
 
 def print_obs_summary(obs: Observability):
@@ -187,7 +201,26 @@ def main(argv=None) -> int:
     ap.add_argument("--trace-capacity", type=int, default=65536,
                     help="flight-recorder ring capacity in events "
                          "(drop-oldest beyond this)")
+    ap.add_argument("--turn-timeout", type=float, default=300.0,
+                    help="seconds to wait for each turn's result; on "
+                         "expiry the turn is aborted ENGINE-SIDE (its KV "
+                         "blocks released) instead of being orphaned")
+    ap.add_argument("--step-deadline", type=float, default=0.0,
+                    help="watchdog deadline for one engine step (seconds, "
+                         "0 = off): a hung megastep becomes a typed "
+                         "StepTimeoutError instead of a frozen dispatcher")
+    ap.add_argument("--journal-dir", default=None, metavar="DIR",
+                    help="write-ahead session journal directory (requires "
+                         "--paged): committed turns survive an engine "
+                         "crash and restore bit-exactly after rebuild")
     args = ap.parse_args(argv)
+    if args.turn_timeout <= 0:
+        raise SystemExit("invalid --turn-timeout: must be > 0 seconds")
+    if args.step_deadline < 0:
+        raise SystemExit("invalid --step-deadline: must be >= 0 seconds")
+    if args.journal_dir and not args.paged:
+        raise SystemExit("--journal-dir requires --paged (only paged "
+                         "sessions export KV pages for the journal)")
 
     obs = build_obs(args)
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -196,7 +229,9 @@ def main(argv=None) -> int:
     params = model.init_params(jax.random.PRNGKey(0))
     engine, backend = build_backend(cfg, params, args, obs=obs)
     lanes = args.max_batch if args.paged else args.lanes
-    rm = AgentRM(backend, AgentRMConfig(lanes=lanes, detect_after_s=20.0),
+    rm = AgentRM(backend,
+                 AgentRMConfig(lanes=lanes, detect_after_s=20.0,
+                               step_deadline_s=args.step_deadline or None),
                  obs=obs)
 
     t0 = time.time()
@@ -208,16 +243,32 @@ def main(argv=None) -> int:
         handles.append((agent, rm.submit(agent, f"turn {i}: do the thing",
                                          queue_class=qc)))
     lat = []
+    timed_out = 0
     for agent, h in handles:
-        out = h.result(timeout=300)
+        try:
+            out = h.result(timeout=args.turn_timeout)
+        except TimeoutError:
+            # abort the turn engine-side so its KV blocks are released —
+            # then wait briefly for the dispatcher to apply the abort
+            rm.cancel(h.turn.tid, reason="exceeded --turn-timeout")
+            try:
+                h.result(timeout=30)
+            except TurnCancelled:
+                pass
+            timed_out += 1
+            print(f"[serve] {agent} -> TIMED OUT after "
+                  f"{args.turn_timeout:.0f}s (turn aborted, blocks freed)")
+            continue
         lat.append(h.turn.end - h.turn.arrival)
         print(f"[serve] {agent} -> {out[:48]}  ({lat[-1]*1000:.0f} ms)")
     snap = rm.monitor.snapshot()
     lat.sort()
+    pct = (f"p50 {lat[len(lat)//2]*1000:.0f}ms "
+           f"p95 {lat[int(0.95*(len(lat)-1))]*1000:.0f}ms"
+           if lat else f"all {timed_out} timed out")
     print(f"[serve] {args.turns} turns in {time.time()-t0:.1f}s | "
-          f"p50 {lat[len(lat)//2]*1000:.0f}ms "
-          f"p95 {lat[int(0.95*(len(lat)-1))]*1000:.0f}ms | "
-          f"reaped {snap.zombies_reaped} recovered {snap.recoveries}")
+          f"{pct} | reaped {snap.zombies_reaped} "
+          f"recovered {snap.recoveries}")
     if args.paged:
         st = engine.step_stats()
         print(f"[serve] megastep: {st['jit_dispatches_per_step']:.2f} "

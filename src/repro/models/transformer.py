@@ -343,7 +343,8 @@ def prefill_chunk_paged(params, pools: Dict, tokens, cache_len, valid,
 
 
 def mixed_step_paged(params, pools: Dict, tokens, cache_lens, valids,
-                     page_tables, cfg: ModelConfig, *, axis_name=None):
+                     page_tables, cfg: ModelConfig, poison_mask=None, *,
+                     axis_name=None):
     """The megastep forward: ONE jitted call advances the whole mixed batch
     one engine iteration — decode rows are width-1 prefill rows (Sarathi
     batch fusion over the paged pools).
@@ -389,7 +390,20 @@ def mixed_step_paged(params, pools: Dict, tokens, cache_lens, valids,
     rows = jnp.arange(x.shape[0])
     last = jnp.clip(jnp.asarray(valids) - 1, 0, x.shape[1] - 1)
     logits = _unembed(params, x[rows, last], cfg)    # (B, V) — last valid pos
-    return jnp.argmax(logits, axis=-1).astype(jnp.int32), {"k": k, "v": v}
+    if poison_mask is not None:
+        # Seeded chaos injection point: poison a row's logits AFTER its K/V
+        # writes so the damage is confined to this row's sampled token. With
+        # an all-False mask the where is a bitwise no-op, keeping the
+        # faults-disabled dispatch identical to an uninstrumented one.
+        logits = jnp.where(poison_mask[:, None], jnp.float32(jnp.nan), logits)
+    # In-jit per-row finiteness check (blast-radius = 1 row): a non-finite
+    # logits row — injected or genuine — reports the -1 sentinel instead of
+    # an argmax over garbage, so the host fails exactly that row's turn while
+    # batchmates' tokens stay bitwise identical to a fault-free step. Still
+    # only one (B,) int32 vector crosses to host.
+    row_ok = jnp.all(jnp.isfinite(logits), axis=-1)
+    ids = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jnp.where(row_ok, ids, jnp.int32(-1)), {"k": k, "v": v}
 
 
 def prefill(params, batch, cfg: ModelConfig, state: Optional[Dict] = None,

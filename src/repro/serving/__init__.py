@@ -1,13 +1,21 @@
 from repro.serving.backend import (EngineBackend, PagedEngineBackend,
                                    SerializedPagedBackend, byte_tokenize)
 from repro.serving.engine import InferenceEngine, Request
-from repro.serving.paging import (BlockAllocator, EngineError,
-                                  OutOfBlocksError, PageTable,
-                                  PagedInferenceEngine, PagedKVCache,
-                                  PagedRequest, SwapManager, budget_buckets)
+from repro.serving.errors import (EngineCrashError, EngineError,
+                                  KVPressureError, PoisonedRowError,
+                                  StepTimeoutError, SwapCorruptionError,
+                                  SwapIOError, TransientStepError)
+from repro.serving.journal import SessionJournal
+from repro.serving.paging import (BlockAllocator, OutOfBlocksError,
+                                  PageTable, PagedInferenceEngine,
+                                  PagedKVCache, PagedRequest, SwapManager,
+                                  budget_buckets)
 
 __all__ = ["EngineBackend", "PagedEngineBackend", "SerializedPagedBackend",
            "byte_tokenize", "InferenceEngine", "Request", "BlockAllocator",
            "EngineError", "OutOfBlocksError", "PageTable",
            "PagedInferenceEngine", "PagedKVCache", "PagedRequest",
-           "SwapManager", "budget_buckets"]
+           "SwapManager", "budget_buckets", "EngineCrashError",
+           "KVPressureError", "PoisonedRowError", "StepTimeoutError",
+           "SwapCorruptionError", "SwapIOError", "TransientStepError",
+           "SessionJournal"]

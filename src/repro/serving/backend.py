@@ -31,7 +31,7 @@ import numpy as np
 from repro.core.middleware import (ModelBackend, StepReport,
                                    SteppableBackend, ZombieKilled)
 from repro.serving.engine import InferenceEngine
-from repro.serving.paging.engine import EngineError
+from repro.serving.errors import EngineError, SwapIOError
 
 __all__ = ["byte_tokenize", "EngineBackend", "EngineError",
            "PagedEngineBackend", "SerializedPagedBackend"]
@@ -65,7 +65,8 @@ class PagedEngineBackend(SteppableBackend):
     PROMPT_TOKENS = 48
 
     def __init__(self, engine, max_new_tokens: int = 12,
-                 prompt_tokens: int = 0, new_tokens_jitter: int = 0):
+                 prompt_tokens: int = 0, new_tokens_jitter: int = 0,
+                 journal=None, engine_factory: Callable = None):
         self.engine = engine
         self.max_new_tokens = max_new_tokens
         # prompt cap in tokens; 0 keeps the class default. Long-prompt
@@ -76,7 +77,15 @@ class PagedEngineBackend(SteppableBackend):
         self.prompt_tokens = prompt_tokens or self.PROMPT_TOKENS
         # per-agent generation-length spread (see _jittered_new_tokens)
         self.new_tokens_jitter = new_tokens_jitter
+        # crash-safe recovery (DESIGN.md §14): with a SessionJournal each
+        # finished turn is committed (atomic publish, checksummed) before
+        # collect() acknowledges it, and an engine_factory lets rebuild()
+        # tear the engine down and restore every journaled session
+        # bit-exactly. Both default off: zero overhead unless asked for.
+        self.journal = journal
+        self.engine_factory = engine_factory
         self.sessions: dict = {}            # agent_id -> rid
+        self._agent_of: dict = {}           # rid -> agent_id (journal key)
         self._lock = threading.Lock()
 
     @property
@@ -97,8 +106,19 @@ class PagedEngineBackend(SteppableBackend):
         with self._lock:
             rid = self.sessions.get(agent_id)
             if rid is None or rid not in self.engine.reqs:
-                rid = self.engine.submit(toks, n_new, retain=True)
+                rid = None
+                if self.journal is not None:
+                    # a session lost engine-side (swap corruption, crash)
+                    # resumes from its last committed state instead of
+                    # starting cold — the journal is the source of truth
+                    payload = self.journal.load(agent_id)
+                    if payload is not None:
+                        rid = self.engine.restore_session(payload)
+                        self.engine.extend(rid, toks, n_new)
+                if rid is None:
+                    rid = self.engine.submit(toks, n_new, retain=True)
                 self.sessions[agent_id] = rid
+                self._agent_of[rid] = agent_id
             else:
                 self.engine.extend(rid, toks, n_new)
             return rid
@@ -107,13 +127,16 @@ class PagedEngineBackend(SteppableBackend):
         with self._lock:
             try:
                 fins = self.engine.step()
+            except EngineError:
+                raise                # already typed — class carries policy
             except Exception as e:
                 raise EngineError(f"paged engine step failed: {e}") from e
             return StepReport(
                 serviced=dict(self.engine.last_serviced),
                 finished=[r.rid for r in fins],
-                failed=[(rid, EngineError(msg))
-                        for rid, msg in self.engine.last_failures],
+                failed=[(rid, err if isinstance(err, EngineError)
+                         else EngineError(str(err)))
+                        for rid, err in self.engine.last_failures],
                 waiting=[r.rid for r in self.engine._queue])
 
     def collect(self, rid: int) -> str:
@@ -121,7 +144,34 @@ class PagedEngineBackend(SteppableBackend):
             req = self.engine.reqs.get(rid)
             if req is None or not req.done:
                 raise EngineError(f"rid {rid} has no finished turn to collect")
+            if self.journal is not None:
+                # commit point: the turn's session state (exact page bytes)
+                # is published atomically BEFORE the result is handed back,
+                # so anything the caller acts on is recoverable
+                agent_id = self._agent_of.get(rid)
+                payload = self.engine.export_session(rid)
+                if agent_id is not None and payload is not None:
+                    self.journal.commit(agent_id, payload)
             return "tok:" + ",".join(str(t) for t in req.out_tokens)
+
+    def rebuild(self) -> bool:
+        """Tear down and rebuild the engine after a fatal fault, restoring
+        every journaled session bit-exactly (pages re-enter through the
+        checksummed swap path). Returns False when not configured for
+        recovery (no factory/journal) — the caller falls back to failing
+        the affected turns. In-flight (uncommitted) turns are NOT here by
+        construction; the dispatcher replays them."""
+        if self.engine_factory is None or self.journal is None:
+            return False
+        with self._lock:
+            self.engine = self.engine_factory()
+            self.sessions.clear()
+            self._agent_of.clear()
+            for agent_id, payload in self.journal.load_all().items():
+                rid = self.engine.restore_session(payload)
+                self.sessions[agent_id] = rid
+                self._agent_of[rid] = agent_id
+            return True
 
     def park_turn(self, rid: int):
         with self._lock:
@@ -170,8 +220,18 @@ class PagedEngineBackend(SteppableBackend):
     def wake_session(self, agent_id: str):
         with self._lock:
             rid = self.sessions.get(agent_id)
-            if rid is not None:
+            if rid is None:
+                return
+            try:
                 self.engine.wake(rid)
+            except SwapIOError:
+                # the swapped payload is junk (checksum/IO failure): drop
+                # the engine-side session — the next begin_turn restores it
+                # from the journal when one exists, or starts it fresh
+                self.sessions.pop(agent_id, None)
+                self._agent_of.pop(rid, None)
+                if rid in self.engine.reqs:
+                    self.engine.release(rid)
 
 
 class SerializedPagedBackend(ModelBackend):

@@ -1,0 +1,92 @@
+"""Typed engine-failure taxonomy (DESIGN.md §14).
+
+Every failure the serving stack can surface to a caller is an
+``EngineError`` subclass, so the middleware can *dispatch on the class*
+instead of parsing messages: transient faults are retried with backoff,
+poisoned rows fail only their own turn, KV pressure degrades gracefully,
+swap-IO failures condemn one session, and fatal classes trigger an engine
+teardown + journal rebuild. A turn handle therefore always resolves to
+either a result or one of these types — never a bare assert, never a hang.
+
+The blast-radius contract each class carries:
+
+  * ``TransientStepError``  — the whole step failed but no state is
+    suspect (e.g. a spurious dispatch failure). Blast radius: zero turns
+    if a retry succeeds; the dispatcher retries with exponential backoff
+    + jitter before escalating.
+  * ``PoisonedRowError``    — one row's logits went NaN/Inf (detected
+    in-jit, reported via the ``-1`` sentinel token). Blast radius: that
+    row's turn only; batchmates' sampled tokens are bitwise unaffected.
+  * ``KVPressureError``     — the block pool could not grow a sequence
+    even after reclaiming every cold page. Blast radius: that sequence's
+    turn; admission additionally degrades by hibernating MLFQ-lowest
+    victims before stalling.
+  * ``SwapIOError`` / ``SwapCorruptionError`` — the swap tier failed a
+    page transfer, or a swapped payload failed its checksum on the way
+    back in. Blast radius: that session's in-flight turn; the session
+    itself is restored from its last journaled commit when one exists.
+  * ``StepTimeoutError``    — the megastep overran the watchdog deadline
+    (a hung dispatch). The dispatcher abandons the step and treats the
+    engine as suspect.
+  * ``EngineCrashError``    — the engine died outright. Together with
+    ``StepTimeoutError`` this is the *fatal* tier: the dispatcher tears
+    the engine down and rebuilds it, restoring every live session from
+    the write-ahead journal (committed turns replay bit-exactly; at most
+    the in-flight turn is replayed).
+"""
+from __future__ import annotations
+
+__all__ = ["EngineError", "TransientStepError", "PoisonedRowError",
+           "KVPressureError", "SwapIOError", "SwapCorruptionError",
+           "StepTimeoutError", "EngineCrashError", "is_transient",
+           "is_fatal"]
+
+
+class EngineError(RuntimeError):
+    """Typed engine failure: raised (or reported) instead of asserting so
+    the middleware can propagate it through ``TurnHandle.result()``."""
+
+
+class TransientStepError(EngineError):
+    """A whole-step failure that left no state suspect; retry with
+    backoff before escalating."""
+
+
+class PoisonedRowError(EngineError):
+    """One row's logits went non-finite; only that row's turn fails."""
+
+
+class KVPressureError(EngineError):
+    """Block-pool exhaustion survived reclaim; one sequence's turn
+    fails (admission degrades instead of stalling)."""
+
+
+class SwapIOError(EngineError):
+    """The swap tier failed a page read/write; one session affected."""
+
+
+class SwapCorruptionError(SwapIOError):
+    """A swapped payload failed its checksum on swap-in: the bytes are
+    junk and the session must be restored from its journal."""
+
+
+class StepTimeoutError(EngineError):
+    """The megastep overran the watchdog deadline (hung dispatch)."""
+
+
+class EngineCrashError(EngineError):
+    """The engine died; rebuild from the session journal."""
+
+
+def is_transient(e: BaseException) -> bool:
+    """Retry-with-backoff tier (no state suspect)."""
+    return isinstance(e, TransientStepError)
+
+
+def is_fatal(e: BaseException) -> bool:
+    """Teardown-and-rebuild tier: the engine itself is suspect. Any
+    non-Engine exception escaping ``step()`` lands here too — an
+    unclassified failure must never be retried against suspect state."""
+    if isinstance(e, (StepTimeoutError, EngineCrashError)):
+        return True
+    return not isinstance(e, EngineError)

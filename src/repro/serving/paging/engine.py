@@ -72,14 +72,13 @@ from repro.serving.paging.allocator import (NULL_BLOCK, OutOfBlocksError,
                                             PageTable)
 from repro.serving.paging.pool import PagedKVCache
 from repro.serving.paging.swap import SwapManager
+# The typed failure taxonomy lives in repro.serving.errors (DESIGN.md §14);
+# EngineError is re-exported here for backwards compatibility.
+from repro.serving.errors import (EngineError, KVPressureError,
+                                  PoisonedRowError, SwapIOError)
 
 QUEUED, ACTIVE, PARKED, SWAPPED, FREED = \
     "queued", "active", "parked", "swapped", "freed"
-
-
-class EngineError(RuntimeError):
-    """Typed engine failure: raised (or reported) instead of asserting so
-    the middleware can propagate it through ``TurnHandle.result()``."""
 
 
 # minimum non-decode dispatch width: the Pallas chunk axis is padded to the
@@ -265,10 +264,18 @@ class PagedInferenceEngine:
         self.h_step = m.histogram("engine.step_s", LATENCY_BUCKETS_S,
                                   reservoir=256)
         self.last_serviced: Dict[int, int] = {}   # rid -> tokens, last step
-        # per-step casualty list: sequences the pool could not grow even
-        # after reclaim (rid, reason) — aborted individually so one
-        # sequence's memory pressure never takes down its batchmates
+        # per-step casualty list: (rid, EngineError) — sequences whose turn
+        # this step killed (KV pressure after reclaim, a poisoned logits
+        # row, a corrupted swap payload), each aborted individually so one
+        # sequence's failure never takes down its batchmates. The error is
+        # the typed instance itself so the middleware can dispatch on class.
         self.last_failures: List[tuple] = []
+        # rows armed for logit poisoning on their next dispatch (seeded
+        # chaos injection — consumed per-rid) + fault counters (§14)
+        self._poison_rids: set = set()
+        self._c_poisoned = m.counter("engine.poisoned_rows")
+        self._c_kv_aborts = m.counter("engine.kv_pressure_aborts")
+        self._c_swap_fail = m.counter("engine.swap_io_failures")
 
         # flight-recorder interning (once, here — the hot path only passes
         # ints). Tracks: one engine row for megasteps, one row per batch
@@ -330,9 +337,9 @@ class PagedInferenceEngine:
         cfg = self.cfg
         if self.mesh is None:
             return jax.jit(
-                lambda params, pools, toks, lens, valids, tables:
+                lambda params, pools, toks, lens, valids, tables, poison:
                 tr.mixed_step_paged(params, pools, toks, lens, valids,
-                                    tables, cfg),
+                                    tables, cfg, poison),
                 donate_argnums=(1,))
         from jax.experimental.shard_map import shard_map
         # pin head_dim: configs that leave it 0 derive d_model // n_heads,
@@ -342,9 +349,9 @@ class PagedInferenceEngine:
                            head_dim=cfg.resolved_head_dim)
         pool_specs = {"k": kv_pool_pspec(), "v": kv_pool_pspec()}
         body = shard_map(
-            lambda params, pools, toks, lens, valids, tables:
+            lambda params, pools, toks, lens, valids, tables, poison:
             tr.mixed_step_paged(params, pools, toks, lens, valids, tables,
-                                lcfg, axis_name=TP),
+                                lcfg, poison, axis_name=TP),
             mesh=self.mesh,
             in_specs=(self._param_specs, pool_specs,
                       *megastep_input_pspecs()),
@@ -373,7 +380,8 @@ class PagedInferenceEngine:
                 zeros((self.max_batch,), jnp.int32),
                 zeros((self.max_batch,), jnp.int32),
                 jnp.full((self.max_batch, self.max_pages), NULL_BLOCK,
-                         jnp.int32))
+                         jnp.int32),
+                zeros((self.max_batch,), jnp.bool_))
             self.cache.set_pools(pools)
             self.compiled_buckets.add(C)
 
@@ -542,7 +550,7 @@ class PagedInferenceEngine:
             req.slot = None
         self.swap.touch(rid)
         if req.state == SWAPPED:
-            self.swap.store.pop(rid)
+            self.swap.discard(rid)
         elif req.table is not None:
             self.cache.free_table(req.table)
             req.table = None
@@ -626,6 +634,19 @@ class PagedInferenceEngine:
                     self._admit_resume(req)
             except OutOfBlocksError:
                 break               # head-of-line blocks until pages free up
+            except SwapIOError as e:
+                # a corrupted / unreadable swap payload kills only THIS
+                # session's admission: the payload is junk, so drop the
+                # session (its owner restores it from the journal) and let
+                # the queue keep moving — never head-of-line-block on it
+                self._c_swap_fail.inc()
+                self.last_failures.append((req.rid, e))
+                self._queue.pop(0)
+                self.swap.discard(req.rid)
+                req.state = FREED
+                req.done = True
+                self.reqs.pop(req.rid, None)
+                continue
             self._queue.pop(0)
             req.slot = self.free_slots.pop(0)
             req.state = ACTIVE
@@ -675,9 +696,9 @@ class PagedInferenceEngine:
         With ``megastep`` (the default) the whole iteration is ONE jitted
         dispatch; the legacy path (one dispatch per prefilling sequence plus
         a decode call) is kept as the benchmark baseline."""
-        self._admit()
         self.last_serviced = {}
         self.last_failures = []
+        self._admit()                 # may append swap-IO casualties
         if not self.active:
             return []
         t0 = time.perf_counter()
@@ -693,14 +714,85 @@ class PagedInferenceEngine:
     def _grown(self, req: PagedRequest, n_tokens: int) -> bool:
         """Per-sequence OOM isolation: if the pool cannot grow this
         sequence even after reclaim, abort IT (retained -> parked,
-        turn lost) and let its batchmates proceed untouched."""
+        turn lost) and let its batchmates proceed untouched. A swap-IO
+        failure during reclaim is confined the same way: the growing
+        sequence's turn dies typed, its batchmates continue."""
         try:
             self._ensure_capacity(req, n_tokens)
             return True
         except OutOfBlocksError as e:
-            self.last_failures.append((req.rid, str(e)))
+            self._c_kv_aborts.inc()
+            self.last_failures.append((req.rid, KVPressureError(str(e))))
             self.abort_turn(req.rid)
             return False
+        except SwapIOError as e:
+            self._c_swap_fail.inc()
+            self.last_failures.append((req.rid, e))
+            self.abort_turn(req.rid)
+            return False
+
+    def _fail_poisoned(self, req: PagedRequest):
+        """A row's logits went non-finite: fail exactly this row's turn
+        (typed ``PoisonedRowError``), leaving batchmates untouched. A
+        retained session parks as usual — the poison lived in the logits,
+        not its cache pages."""
+        self._poison_rids.discard(req.rid)
+        self._c_poisoned.inc()
+        self.last_serviced.pop(req.rid, None)
+        self.last_failures.append((req.rid, PoisonedRowError(
+            f"rid {req.rid}: non-finite logits row — turn aborted, "
+            "batchmates unaffected")))
+        self.abort_turn(req.rid)
+
+    # --------------------------------------------- chaos / recovery API
+    def inject_poison(self, rid: int):
+        """Arm one row for logit poisoning (NaN) on its next dispatch —
+        the seeded fault layer's handle for exercising the in-jit
+        finiteness sentinel end-to-end. Consumed when the poison lands."""
+        if rid in self.reqs:
+            self._poison_rids.add(rid)
+
+    def export_session(self, rid: int) -> Optional[Dict]:
+        """Snapshot a session's recoverable state (exact KV page bytes +
+        turn metadata) for the write-ahead session journal. Only coherent
+        between turns (parked/swapped); an ACTIVE mid-turn session returns
+        None — its in-flight turn is the journal's replay unit, not a
+        snapshot target."""
+        req = self.reqs.get(rid)
+        if req is None or req.state == ACTIVE or not req.done:
+            return None
+        if req.state == SWAPPED:
+            payload = self.swap.store.peek(rid)
+            k_pages, v_pages, n = payload
+        elif req.table is not None:
+            k_pages, v_pages = self.cache.gather(req.table)
+            n = req.table.num_tokens
+        else:
+            return None
+        return {"k_pages": np.asarray(k_pages), "v_pages": np.asarray(v_pages),
+                "num_tokens": int(n), "last_tok": int(req.last_tok),
+                "out_tokens": [int(t) for t in req.out_tokens],
+                "prompt": np.asarray(req.prompt, np.int32)}
+
+    def restore_session(self, payload: Dict) -> int:
+        """Rebuild a journaled session in THIS engine: the payload's pages
+        enter through the swap store (checksummed), so the session comes
+        back SWAPPED and its next turn wakes it through the ordinary
+        demand-paging path — the same bit-exact route hibernation takes."""
+        rid = self._next_rid
+        self._next_rid += 1
+        req = PagedRequest(rid, np.asarray(payload["prompt"], np.int32),
+                           retain=True, state=SWAPPED, done=True,
+                           fresh_turn=False,
+                           last_tok=int(payload["last_tok"]))
+        req.out_tokens = [int(t) for t in payload.get("out_tokens", ())]
+        req.pending = []
+        req.t_enqueue = req.t_queued = time.perf_counter()
+        self.reqs[rid] = req
+        self.swap.adopt(rid, np.asarray(payload["k_pages"]),
+                        np.asarray(payload["v_pages"]),
+                        int(payload["num_tokens"]))
+        return rid
 
     def _finish_token(self, req: PagedRequest, tok: int,
                       finished: List[PagedRequest]):
@@ -821,6 +913,7 @@ class PagedInferenceEngine:
         valids = np.zeros((self.max_batch,), np.int32)
         tables = np.full((self.max_batch, self.max_pages), NULL_BLOCK,
                          np.int32)
+        poison = np.zeros((self.max_batch,), np.bool_)
         for req, T in rows:
             s = req.slot
             if req.prefilling:
@@ -830,9 +923,12 @@ class PagedInferenceEngine:
             lens[s] = req.num_tokens
             valids[s] = T
             tables[s] = req.table.padded(self.max_pages)
+            if req.rid in self._poison_rids:
+                poison[s] = True
         next_tok, pools = self._mega(
             self.params, self.cache.pools(), jnp.asarray(toks),
-            jnp.asarray(lens), jnp.asarray(valids), jnp.asarray(tables))
+            jnp.asarray(lens), jnp.asarray(valids), jnp.asarray(tables),
+            jnp.asarray(poison))
         self.cache.set_pools(pools)
         self.jit_dispatches += 1
         self.steps_dispatched += 1
@@ -853,6 +949,16 @@ class PagedInferenceEngine:
                     rec.complete(self._ev_prefill,
                                  self._sess_track(req.rid), t0,
                                  req.rid, T, req.num_tokens)
+            if int(out[req.slot]) < 0:
+                # the in-jit finiteness sentinel: this row's logits went
+                # NaN/Inf (injected or genuine) — fail exactly this turn.
+                # Batchmates read their own slots, which a poisoned row
+                # cannot perturb (attention is per-row over its own pages
+                # and poison lands after the K/V writes).
+                if was_prefilling:
+                    del req.pending[:T]
+                self._fail_poisoned(req)
+                continue
             if was_prefilling:
                 del req.pending[:T]
                 if req.fresh_turn:
@@ -921,8 +1027,11 @@ class PagedInferenceEngine:
                                            req.num_tokens)
             self.last_serviced[req.rid] = T
             if not req.pending:
-                self._finish_token(req, int(jnp.argmax(logits[0, T - 1])),
-                                   finished)
+                row = np.asarray(logits[0, T - 1])
+                if req.rid in self._poison_rids or not np.isfinite(row).all():
+                    self._fail_poisoned(req)
+                else:
+                    self._finish_token(req, int(row.argmax()), finished)
 
         # ---- decode: one token for every sequence past prefill
         decoding = [r for r in decoding
@@ -944,9 +1053,14 @@ class PagedInferenceEngine:
             self.decode_steps += 1
             self.tokens_real += len(decoding)
             self.tokens_dispatched += self.max_batch
-            out = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+            rows_np = np.asarray(logits[:, 0])
+            out = rows_np.argmax(axis=-1)
+            row_ok = np.isfinite(rows_np).all(axis=-1)
             for req in decoding:
                 req.table.num_tokens += 1
+                if req.rid in self._poison_rids or not row_ok[req.slot]:
+                    self._fail_poisoned(req)
+                    continue
                 self.last_serviced[req.rid] = \
                     self.last_serviced.get(req.rid, 0) + 1
                 self._finish_token(req, int(out[req.slot]), finished)

@@ -10,12 +10,25 @@ with the CLM's tier transitions as the access pattern.
 """
 from __future__ import annotations
 
+import zlib
 from collections import OrderedDict
 from typing import Dict, Optional
 
+import numpy as np
+
 from repro.core.context.tiers import KVSwapStore
+from repro.serving.errors import SwapCorruptionError, SwapIOError
 from repro.serving.paging.allocator import OutOfBlocksError, PageTable
 from repro.serving.paging.pool import PagedKVCache
+
+
+def page_checksum(k_pages, v_pages) -> int:
+    """crc32 over the raw page bytes — cheap relative to the host<->device
+    copy it rides along with, and enough to catch the bit flips / torn
+    writes the swap tier's IO path could introduce."""
+    k = np.ascontiguousarray(np.asarray(k_pages))
+    v = np.ascontiguousarray(np.asarray(v_pages))
+    return zlib.crc32(v.tobytes(), zlib.crc32(k.tobytes()))
 
 
 class SwapManager:
@@ -32,8 +45,13 @@ class SwapManager:
         # key -> PageTable of resident-but-cold sequences, LRU order (oldest
         # first); only these are eviction candidates.
         self._cold: "OrderedDict[object, PageTable]" = OrderedDict()
+        # key -> crc32 of the payload written at swap-out, verified at
+        # swap-in (DESIGN.md §14). Keys swapped out by ANOTHER manager over
+        # a shared store have no entry here and skip verification.
+        self._crc: Dict[object, int] = {}
         self.swaps_out = 0
         self.swaps_in = 0
+        self.corruptions_detected = 0
 
     # ------------------------------------------------------- temperature
     def mark_cold(self, key, pt: PageTable):
@@ -58,10 +76,19 @@ class SwapManager:
     # ------------------------------------------------------------- moves
     def swap_out(self, key, pt: PageTable) -> int:
         """Device -> host: copy live pages out, free the device blocks.
-        Returns bytes moved (O(live pages), not O(max_len))."""
+        Returns bytes moved (O(live pages), not O(max_len)). A store write
+        failure surfaces as ``SwapIOError`` BEFORE any device block is
+        freed, so the sequence stays resident and intact."""
         k_pages, v_pages = self.cache.gather(pt)
         nbytes = k_pages.nbytes + v_pages.nbytes
-        self.store.put(key, (k_pages, v_pages, pt.num_tokens), nbytes)
+        crc = page_checksum(k_pages, v_pages)
+        try:
+            self.store.put(key, (k_pages, v_pages, pt.num_tokens), nbytes)
+        except SwapIOError:
+            raise
+        except Exception as e:
+            raise SwapIOError(f"swap-out of {key} failed: {e}") from e
+        self._crc[key] = crc
         self.cache.free_table(pt)
         self._cold.pop(key, None)
         self.swaps_out += 1
@@ -72,13 +99,42 @@ class SwapManager:
     def swap_in(self, key) -> PageTable:
         """Host -> device: rebind the stored pages to fresh blocks (the ids
         may differ — the page table is remapped, data is bit-identical).
-        Reclaims cold sequences if the pool is under pressure."""
-        k_pages, _, _ = self.store.peek(key)
-        self.reclaim(k_pages.shape[1], exclude=key)
-        k_pages, v_pages, num_tokens = self.store.pop(key)
+        Reclaims cold sequences if the pool is under pressure. The payload's
+        checksum is verified before a single page lands on device: a
+        mismatch drops the junk bytes and raises ``SwapCorruptionError``
+        (the session must be restored from its journal, DESIGN.md §14)."""
+        try:
+            k_pages, _, _ = self.store.peek(key)
+            self.reclaim(k_pages.shape[1], exclude=key)
+            k_pages, v_pages, num_tokens = self.store.pop(key)
+        except (SwapIOError, OutOfBlocksError):
+            raise
+        except Exception as e:
+            raise SwapIOError(f"swap-in of {key} failed: {e}") from e
+        expect = self._crc.pop(key, None)
+        if expect is not None and page_checksum(k_pages, v_pages) != expect:
+            self.corruptions_detected += 1
+            raise SwapCorruptionError(
+                f"swapped payload for {key} failed its checksum "
+                "(bytes corrupted in the swap tier)")
         pt = self.cache.scatter(k_pages, v_pages, num_tokens)
         self.swaps_in += 1
         return pt
+
+    def adopt(self, key, k_pages, v_pages, num_tokens: int) -> int:
+        """Place an externally-sourced payload (a journal restore) into the
+        store as if it had been swapped out by this manager — checksummed,
+        so a later wake gets the same integrity check."""
+        nbytes = k_pages.nbytes + v_pages.nbytes
+        self._crc[key] = page_checksum(k_pages, v_pages)
+        self.store.put(key, (k_pages, v_pages, int(num_tokens)), nbytes)
+        return nbytes
+
+    def discard(self, key):
+        """Drop a swapped payload and its checksum (session released)."""
+        self._crc.pop(key, None)
+        if key in self.store:
+            self.store.pop(key)
 
     # ----------------------------------------------------------- reclaim
     def reclaim(self, n_blocks: int, exclude=None) -> int:
@@ -104,6 +160,7 @@ class SwapManager:
         return {
             "swaps_out": self.swaps_out,
             "swaps_in": self.swaps_in,
+            "swap_corruptions": self.corruptions_detected,
             "swap_bytes_out": self.store.bytes_in,
             "swap_bytes_in": self.store.bytes_out,
             "swap_bytes_held": self.store.bytes_stored,

@@ -1,0 +1,119 @@
+"""Direct unit tests for rate-limit-aware admission (paper §IV.B.3):
+TokenBucket refill/capacity arithmetic, AIMD floor and recovery, the
+AdmissionController's multiplier-scaled budget, and the middleware's
+``report_rate_limited`` hook that feeds simulated 429s into all of it."""
+import pytest
+
+from repro.core import AgentRM, AgentRMConfig, StepReport, SteppableBackend
+from repro.core.scheduler.ratelimit import (AdmissionController,
+                                            AIMDController, TokenBucket)
+
+
+# ------------------------------------------------------------ TokenBucket
+
+def test_bucket_starts_full_and_refill_caps_at_burst():
+    b = TokenBucket(rate=10.0, burst=100.0)
+    assert b.available(0.0) == 100.0
+    assert b.try_consume(100.0, 0.0)
+    # 5s * 10/s = 50 back; 1000s would overshoot — capped at burst
+    assert b.available(5.0) == pytest.approx(50.0)
+    assert b.available(1000.0) == 100.0
+
+
+def test_bucket_consume_is_all_or_nothing():
+    b = TokenBucket(rate=1.0, burst=10.0)
+    assert not b.try_consume(11.0, 0.0)
+    assert b.available(0.0) == 10.0          # failed consume takes nothing
+    assert b.try_consume(10.0, 0.0)
+    assert not b.try_consume(0.5, 0.0)
+
+
+def test_bucket_time_until_is_deficit_over_rate():
+    b = TokenBucket(rate=4.0, burst=20.0)
+    assert b.time_until(20.0, 0.0) == 0.0    # already affordable
+    assert b.try_consume(20.0, 0.0)
+    assert b.time_until(8.0, 0.0) == pytest.approx(2.0)
+    # partway through the wait the remaining deficit shrinks accordingly
+    assert b.time_until(8.0, 1.0) == pytest.approx(1.0)
+
+
+def test_bucket_zero_rate_never_refills():
+    b = TokenBucket(rate=0.0, burst=5.0)
+    assert b.try_consume(5.0, 0.0)
+    assert b.time_until(1.0, 100.0) == float("inf")
+    assert b.available(1e9) == 0.0
+
+
+# ------------------------------------------------------------------ AIMD
+
+def test_aimd_multiplicative_decrease_hits_floor():
+    a = AIMDController()
+    a.on_rate_limited()
+    assert a.multiplier == pytest.approx(0.5)
+    for _ in range(10):
+        a.on_rate_limited()
+    assert a.multiplier == a.floor           # floored, never 0
+
+
+def test_aimd_additive_recovery_caps_at_one():
+    a = AIMDController()
+    for _ in range(5):
+        a.on_rate_limited()
+    start = a.multiplier
+    a.on_clean()
+    assert a.multiplier == pytest.approx(start + a.increase)
+    for _ in range(100):
+        a.on_clean()
+    assert a.multiplier == 1.0
+
+
+# ------------------------------------------------------- AdmissionController
+
+def test_admission_scales_budget_by_aimd_multiplier():
+    ac = AdmissionController(rate=0.0, burst=1000.0)
+    ac.aimd.multiplier = 0.5
+    # a 400-token turn costs 800 bucket tokens at multiplier 0.5
+    assert ac.admit(400.0, 0.0)
+    assert ac.bucket.available(0.0) == pytest.approx(200.0)
+    assert not ac.admit(400.0, 0.0)          # 800 > 200 remaining
+
+
+def test_admission_next_slot_reflects_scaled_deficit():
+    ac = AdmissionController(rate=100.0, burst=100.0)
+    ac.aimd.multiplier = 0.5
+    assert ac.admit(50.0, 0.0)               # drains the bucket (100 scaled)
+    assert ac.next_slot(50.0, 0.0) == pytest.approx(1.0)
+
+
+# ------------------------------------- middleware 429 hook (chaos wiring)
+
+class _OneShot(SteppableBackend):
+    def begin_turn(self, agent_id, context, prompt):
+        return 1
+
+    def can_admit(self, agent_id, prompt):
+        return True
+
+    def collect(self, rid):
+        return "done"
+
+    def abort_turn(self, rid):
+        pass
+
+    def step(self):
+        return StepReport(serviced={}, finished=[1], failed=[], waiting=[])
+
+
+def test_report_rate_limited_feeds_aimd_and_counters():
+    rm = AgentRM(_OneShot(), AgentRMConfig(lanes=1))
+    try:
+        rm.report_rate_limited(2)
+        assert rm.admission.aimd.multiplier == pytest.approx(0.25)
+        m = rm.obs.metrics
+        assert m.counter("rm.rate_limit_events").value == 2
+        assert m.gauge("rm.aimd_multiplier").value == pytest.approx(0.25)
+        # clean admissions recover the multiplier additively
+        assert rm.submit("a", "p").result(10) == "done"
+        assert rm.admission.aimd.multiplier == pytest.approx(0.30)
+    finally:
+        rm.shutdown()
