@@ -545,6 +545,11 @@ def chaos_soak(seed: int = 0, smoke: bool = False) -> dict:
             results[name] = run_chaos_scenario(cfg, params, name, sc,
                                                seed=seed, smoke=smoke,
                                                journal_root=jroot)
+        # fleet arm: 3 engines under the same contract, plus the fleet
+        # fault kinds (engine loss, migration interrupts, network delay)
+        from benchmarks.fleet import fleet_chaos_row
+        results["fleet"] = fleet_chaos_row(cfg, params, seed=seed,
+                                           smoke=smoke, journal_root=jroot)
     parity = _chaos_parity(cfg, params, scenarios["mixed"], smoke=smoke)
     payload = {
         "config": {"seed": seed, "smoke": smoke, "rates": CHAOS_RATES},

@@ -160,3 +160,11 @@ class KVSwapStore:
 
     def __len__(self) -> int:
         return len(self._pages)
+
+    def tier_stats(self) -> dict:
+        """Per-tier occupancy, merged into ``SwapManager.stats()`` so
+        ``kv_stats`` can surface where swapped pages actually live.
+        Subclasses with more tiers (e.g. the disk spill store) extend
+        this dict."""
+        return {"swap_ram_sessions": len(self._pages),
+                "swap_ram_bytes": int(sum(self._bytes.values()))}

@@ -115,6 +115,21 @@ class SteppableBackend:
         this agent's session."""
         raise NotImplementedError
 
+    def victim_parkable(self, rid: int) -> bool:
+        """May KV-pressure degradation pick this running turn as its
+        park-and-hibernate victim? Backends return False for sequences
+        that are already cold (parked/swapped/mid-migration) — parking
+        those frees nothing and stalls admission for a retry cycle."""
+        return True
+
+    def rebalance_for_admission(self, agent_id: str, prompt: str) -> bool:
+        """Fleet hook, tried BEFORE degradation when ``can_admit`` fails:
+        migrate load to another engine (or re-place the agent) so the
+        waiter fits without hibernating anyone. Returns True when
+        placement changed and admission is worth re-checking; the
+        single-engine default has nowhere to move load."""
+        return False
+
 
 @dataclass
 class AgentRMConfig:
@@ -266,11 +281,13 @@ class AgentRM:
         self._ev_rebuilt = rec.name("sched.engine_rebuilt", ("failures",))
         self._ev_degraded = rec.name("sched.kv_degraded",
                                      ("victim_tid", "for_tid"))
+        self._ev_rebalanced = rec.name("sched.kv_rebalanced", ("for_tid",))
         self._ev_retry = rec.name("sched.step_retry", ("failures",))
         m = self.obs.metrics
         self._c_retries = m.counter("rm.step_retries")
         self._c_rebuilds = m.counter("rm.engine_rebuilds")
         self._c_degrade = m.counter("rm.kv_degradations")
+        self._c_rebalance = m.counter("rm.kv_rebalances")
         self._c_429 = m.counter("rm.rate_limit_events")
         self._c_step_timeouts = m.counter("rm.step_timeouts")
         self._consec_failures = 0
@@ -708,12 +725,20 @@ class AgentRM:
                 # a resumed turn already paid admission; only new turns are
                 # gated on engine blocks and the AIMD token bucket
                 if not be.can_admit(nxt.agent_id, prompt):
-                    # graceful degradation under KV pressure (§14): park
-                    # the MLFQ-lowest running victim — its pages go cold
-                    # and reclaimable, its slot frees — instead of
-                    # head-of-line stalling admission on a full pool
-                    if not (self._degrade_for_blocks(be, nxt, now)
-                            and be.can_admit(nxt.agent_id, prompt)):
+                    # under pressure, prefer MOVING load over degrading it
+                    # (§15): a fleet backend migrates a cold session to
+                    # the least-loaded engine (or re-places the agent)
+                    # when the fleet has headroom; only when it doesn't —
+                    # or on a single engine — fall back to parking the
+                    # MLFQ-lowest running victim so its pages go cold and
+                    # reclaimable instead of head-of-line stalling
+                    # admission on a full pool
+                    if self._rebalance_for_admission(be, nxt, prompt):
+                        pass            # placement changed; re-check below
+                    elif not self._degrade_for_blocks(be, nxt, now):
+                        self._requeue_waiting(nxt, now)
+                        break
+                    if not be.can_admit(nxt.agent_id, prompt):
                         self._requeue_waiting(nxt, now)
                         break
                 if not self.admission.admit(nxt.tokens, now):
@@ -765,6 +790,24 @@ class AgentRM:
         for t in deferred:
             self._requeue_waiting(t, now)
 
+    def _rebalance_for_admission(self, be, nxt: Turn, prompt: str) -> bool:
+        """Try the backend's fleet rebalance hook (migrate-to-least-loaded,
+        §15) before degrading anyone. Best-effort: a backend without the
+        hook, or an exception inside it, just means no rebalance."""
+        hook = getattr(be, "rebalance_for_admission", None)
+        if hook is None:
+            return False
+        try:
+            moved = bool(hook(nxt.agent_id, prompt))
+        except BaseException:  # noqa: BLE001 — degrade path still works
+            return False
+        if moved:
+            self._c_rebalance.inc()
+            if self.obs.tracing:
+                self.obs.recorder.instant(self._ev_rebalanced,
+                                          self._tr_faults, nxt.tid)
+        return moved
+
     def _degrade_for_blocks(self, be, nxt: Turn, now: float) -> bool:
         """Hibernate the MLFQ-lowest running victim so its pages become
         reclaimable cold state (park -> swap-under-pressure), freeing its
@@ -773,11 +816,18 @@ class AgentRM:
         waiter's, or equal with at least one token of service this run —
         so an admitted turn always decodes before it can itself be
         displaced by an equal-priority waiter, and every park/admit cycle
-        makes progress. Returns True when a victim was parked."""
+        makes progress. Victims the backend reports as not parkable
+        (already hibernated, resume still queued, or mid-migration) are
+        skipped — parking one frees nothing and the failed park would
+        stall admission for a full retry cycle. Returns True when a
+        victim was parked."""
         wait_lvl = self.policy.level_of(nxt)
+        parkable = getattr(be, "victim_parkable", None)
         victim_tid, victim_lvl = None, -1
         for tid, rec in self._running.items():
             if rec["cancelled"].is_set():
+                continue
+            if parkable is not None and not parkable(rec["rid"]):
                 continue
             lvl = self.policy.level_of(rec["turn"])
             eligible = lvl > wait_lvl or (lvl == wait_lvl

@@ -105,6 +105,11 @@ class ChaosBackend(SteppableBackend):
         self.step_idx = 0
         self.injected: Dict[str, int] = {k: 0 for k in FAULT_KINDS}
         self._squat: List[int] = []             # hostage block ids
+        # the allocator the hostages came from: with a FLEET inner,
+        # ``self.engine`` re-resolves to the first ALIVE member and can
+        # point at a DIFFERENT engine by release time (after a loss) —
+        # releasing the ids there would corrupt an innocent allocator
+        self._squat_alloc = None
         self._squat_release_at = -1
 
     # ----------------------------------------------------- delegation
@@ -141,6 +146,14 @@ class ChaosBackend(SteppableBackend):
     def can_admit(self, agent_id: str, prompt: str) -> bool:
         return self.inner.can_admit(agent_id, prompt)
 
+    def victim_parkable(self, rid: int) -> bool:
+        hook = getattr(self.inner, "victim_parkable", None)
+        return True if hook is None else hook(rid)
+
+    def rebalance_for_admission(self, agent_id: str, prompt: str) -> bool:
+        hook = getattr(self.inner, "rebalance_for_admission", None)
+        return False if hook is None else hook(agent_id, prompt)
+
     def hibernate_session(self, agent_id: str):
         self.inner.hibernate_session(agent_id)
 
@@ -151,14 +164,16 @@ class ChaosBackend(SteppableBackend):
         # hostage blocks belong to the torn-down engine's allocator —
         # dropping the ids is correct, freeing them into the new one isn't
         self._squat = []
+        self._squat_alloc = None
         self._squat_release_at = -1
         return self.inner.rebuild()
 
     # ------------------------------------------------------ injection
     def release_squat(self):
-        if self._squat:
-            self.inner.engine.cache.allocator.release_many(self._squat)
-            self._squat = []
+        if self._squat and self._squat_alloc is not None:
+            self._squat_alloc.release_many(self._squat)
+        self._squat = []
+        self._squat_alloc = None
         self._squat_release_at = -1
 
     def step(self) -> StepReport:
@@ -197,6 +212,7 @@ class ChaosBackend(SteppableBackend):
             n = int(alloc.num_free * min(max(f.param, 0.0), 0.9))
             if n > 0:
                 self._squat = alloc.alloc_many(n)
+                self._squat_alloc = alloc
                 self._squat_release_at = self.step_idx + self.SQUAT_STEPS
             else:
                 self.injected[f.kind] -= 1
@@ -216,5 +232,22 @@ class ChaosBackend(SteppableBackend):
         if f.kind == "rate_limit":
             if self.on_rate_limit is not None:
                 self.on_rate_limit(int(f.param))
+            return
+        # fleet kinds: dispatched through duck-typed hooks so the same
+        # plan runs against a single engine (no hook -> counted no-op)
+        if f.kind == "engine_loss":
+            hook = getattr(self.inner, "inject_engine_loss", None)
+            if hook is None or not hook(f.param):
+                self.injected[f.kind] -= 1
+            return
+        if f.kind == "migration_interrupt":
+            hook = getattr(self.inner, "interrupt_migrations", None)
+            if hook is None or not hook():
+                self.injected[f.kind] -= 1
+            return
+        if f.kind == "network_delay":
+            hook = getattr(self.inner, "set_network_delay", None)
+            if hook is None or not hook(f.param):
+                self.injected[f.kind] -= 1
             return
         raise ValueError(f"unknown fault kind {f.kind!r}")

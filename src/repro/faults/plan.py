@@ -18,6 +18,23 @@ Each ``FaultSpec`` addresses one hardened boundary:
   ``rate_limit``       ``param`` simulated upstream 429s fed to the AIMD
                        admission controller
   ``crash``            fatal engine crash (journal rebuild + replay)
+
+Fleet-level kinds (no-ops against a single-engine backend — the hook
+methods only exist on ``FleetBackend``; injections against backends
+without the hook are decremented back out of ``injected``):
+
+  ``engine_loss``          one alive fleet engine dies; ``param`` picks it
+                           (never the last engine — that would be "cluster
+                           loss", a different drill)
+  ``migration_interrupt``  every in-flight fluid migration aborts at its
+                           next tick (streaming phase only; zero leaks)
+  ``network_delay``        ``param`` seconds of stall on the next KV page
+                           stream tick (slow interconnect, not a hang)
+
+The determinism contract: generation draws from ONE ``random.Random``
+stream, iterating kinds in ``FAULT_KINDS`` order with one draw per kind
+per step regardless of whether it fires — so a given seed always yields
+the same plan, with or without chaos actually enabled for a kind.
 """
 from __future__ import annotations
 
@@ -29,10 +46,15 @@ __all__ = ["FaultSpec", "FaultPlan", "FAULT_KINDS"]
 
 FAULT_KINDS = ("step_exception", "step_hang", "poison_row", "kv_squat",
                "swap_write_error", "swap_read_error", "swap_corrupt",
-               "rate_limit", "crash")
+               "rate_limit", "crash",
+               # fleet-level kinds (appended — earlier kinds keep their
+               # position in the per-step draw order)
+               "engine_loss", "migration_interrupt", "network_delay")
 
 # Default per-step firing probability of each kind. Crashes are rare —
-# each one tears the engine down and replays every in-flight turn.
+# each one tears the engine down and replays every in-flight turn. The
+# fleet kinds default to 0 (opt-in): against a single engine they are
+# meaningless, and a fleet soak enables them explicitly.
 DEFAULT_RATES: Dict[str, float] = {
     "step_exception": 0.020,
     "step_hang": 0.004,
@@ -43,6 +65,9 @@ DEFAULT_RATES: Dict[str, float] = {
     "swap_corrupt": 0.004,
     "rate_limit": 0.010,
     "crash": 0.002,
+    "engine_loss": 0.0,
+    "migration_interrupt": 0.0,
+    "network_delay": 0.0,
 }
 
 
@@ -89,7 +114,8 @@ class FaultPlan:
     def generate(cls, seed: int, n_steps: int,
                  rates: Optional[Dict[str, float]] = None,
                  hang_s: float = 0.6, squat_frac: float = 0.5,
-                 burst: int = 3, warmup: int = 4) -> "FaultPlan":
+                 burst: int = 3, warmup: int = 4,
+                 net_delay_s: float = 0.05) -> "FaultPlan":
         """Deterministic plan over ``n_steps`` backend steps. ``rates``
         overrides per-kind firing probabilities (a kind absent from the
         override keeps its default; rate 0 disables it). The first
@@ -113,6 +139,10 @@ class FaultPlan:
                     param = float(rng.randint(1, burst))
                 elif kind == "poison_row":
                     param = float(rng.randrange(1 << 16))  # victim pick
+                elif kind == "engine_loss":
+                    param = float(rng.randrange(1 << 16))  # victim engine
+                elif kind == "network_delay":
+                    param = net_delay_s * rng.uniform(0.5, 1.5)
                 else:
                     param = 0.0
                 faults.append(FaultSpec(step, kind, param))

@@ -25,10 +25,23 @@ snapshot. See DESIGN.md §12 and the README "tracing a run" walkthrough.
 them with ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before
 launch) and N dividing the model's KV-head count. Mesh-shape mistakes
 surface as CLI errors here, never as shard_map tracebacks.
+
+``--fleet N`` (requires ``--paged``) runs N engines — named engine0..
+engineN-1, sharing one Observability — behind the elastic fleet router
+(DESIGN.md §15): admission places each agent on the least-loaded
+engine, sessions migrate between engines via checksummed KV-page
+streams, and an engine loss fails in-flight turns typed while
+journaled sessions restore bit-exactly on survivors. ``--kill IDX``
+kills that engine after the first completed turn (failed turns are
+resubmitted to demonstrate failover); ``--drain IDX`` gracefully
+drains it instead. ``--spill-dir DIR`` puts a crc32-checked disk tier
+below each engine's host-RAM swap store (``--spill-capacity-mb``
+bounds the RAM tier).
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -36,11 +49,13 @@ import jax
 from repro.configs import get_config, get_smoke_config
 from repro.core import AgentRM, AgentRMConfig
 from repro.core.scheduler.task import QueueClass
+from repro.distributed.elastic import FleetBackend
 from repro.distributed.sharding import validate_tp
 from repro.launch.mesh import make_tp_mesh
 from repro.models import build
 from repro.obs import Observability, TraceConfig
-from repro.serving import (EngineBackend, InferenceEngine,
+from repro.serving import (DiskTierKVSwapStore, EngineBackend,
+                           EngineLostError, InferenceEngine,
                            PagedEngineBackend, PagedInferenceEngine,
                            SessionJournal)
 from repro.core.middleware import TurnCancelled
@@ -104,12 +119,50 @@ def build_backend(cfg, params, args, obs=None):
                                      max_new_tokens=args.max_new_tokens)
     mesh = build_mesh(cfg, args)    # mesh validation, as a CLI error
 
-    def make_engine():
+    def make_store(name: str):
+        """Optional disk tier below the host-RAM swap store; each engine
+        gets its own spill subdirectory so keys never collide."""
+        if not getattr(args, "spill_dir", None):
+            return None
+        return DiskTierKVSwapStore(
+            os.path.join(args.spill_dir, name),
+            capacity_bytes=args.spill_capacity_mb << 20)
+
+    def make_engine(name: str = "engine"):
         return PagedInferenceEngine(
             cfg, params, num_blocks=args.num_blocks,
             block_size=args.block_size, max_batch=args.max_batch,
             max_len=args.max_len, prefill_chunk=args.prefill_chunk,
-            token_budget=args.token_budget or None, mesh=mesh, obs=obs)
+            token_budget=args.token_budget or None, mesh=mesh, obs=obs,
+            swap_store=make_store(name), name=name)
+
+    journal = None
+    if getattr(args, "journal_dir", None):
+        # crash-safe recovery (DESIGN.md §14): committed turns journal to
+        # disk; a fatal engine fault rebuilds via the factory and restores.
+        # With a fleet the journal is SHARED — it is what lets a session
+        # journaled on a dead engine wake bit-exactly on a survivor.
+        journal = SessionJournal(args.journal_dir)
+
+    fleet_n = getattr(args, "fleet", 1) or 1
+    if fleet_n > 1:
+        members = []
+        for i in range(fleet_n):
+            name = f"engine{i}"
+
+            def factory(name=name):
+                return make_engine(name)
+
+            try:
+                eng = factory()
+            except ValueError as e:
+                raise SystemExit(f"invalid --token-budget: {e}") from e
+            eng.compile_buckets()
+            members.append(PagedEngineBackend(
+                eng, max_new_tokens=args.max_new_tokens, journal=journal,
+                engine_factory=factory if journal else None))
+        fleet = FleetBackend(members, journal=journal)
+        return fleet, fleet
 
     try:
         engine = make_engine()
@@ -118,47 +171,66 @@ def build_backend(cfg, params, args, obs=None):
     # pre-trace every megastep bucket so live traffic never blocks the
     # fused dispatcher (and its heartbeats) in an XLA compile
     engine.compile_buckets()
-    journal = factory = None
-    if getattr(args, "journal_dir", None):
-        # crash-safe recovery (DESIGN.md §14): committed turns journal to
-        # disk; a fatal engine fault rebuilds via the factory and restores
-        journal = SessionJournal(args.journal_dir)
-        factory = make_engine
     return engine, PagedEngineBackend(engine,
                                       max_new_tokens=args.max_new_tokens,
                                       journal=journal,
-                                      engine_factory=factory)
+                                      engine_factory=(make_engine if journal
+                                                      else None))
 
 
-def print_obs_summary(obs: Observability):
-    """One-screen curated end-of-run summary from the unified registry."""
+def print_obs_summary(obs: Observability, engine_names=("engine",)):
+    """One-screen curated end-of-run summary from the unified registry.
+
+    Per-engine metrics live under ``<name>.*`` (and ``kv.<name>.*`` for
+    non-default names), so a fleet run passes every engine's name and
+    the summary aggregates: counters sum, histograms merge bucket-wise
+    before the quantile is taken."""
+    from repro.obs.metrics import Histogram
     m = obs.metrics
 
-    def q(name, qq):
-        h = m.get(name)
-        return (h.quantile(qq) or 0.0) * 1000 if h is not None else 0.0
+    def q(suffix, qq):
+        hs = [h for h in (m.get(f"{n}.{suffix}") for n in engine_names)
+              if h is not None and h.count]
+        if not hs:
+            return 0.0
+        merged = Histogram("merged", hs[0].bounds)
+        for h in hs:
+            merged.counts = merged.counts + h.counts
+            merged.count += h.count
+            merged.sum += h.sum
+            merged.min = min(merged.min, h.min)
+            merged.max = max(merged.max, h.max)
+        return (merged.quantile(qq) or 0.0) * 1000
 
     def c(name):
         c_ = m.get(name)
         return int(c_.value) if c_ is not None else 0
 
-    real, disp = c("engine.tokens_real"), c("engine.tokens_dispatched")
+    def ce(suffix):
+        return sum(c(f"{n}.{suffix}") for n in engine_names)
+
+    real, disp = ce("tokens_real"), ce("tokens_dispatched")
     pad = 1.0 - real / disp if disp else 0.0
     print("[serve] --- metrics (unified registry) ---")
-    print(f"[serve] ttft  p50 {q('engine.ttft_s', .5):.0f}ms  "
-          f"p95 {q('engine.ttft_s', .95):.0f}ms | "
-          f"itl p50 {q('engine.itl_s', .5):.1f}ms  "
-          f"p95 {q('engine.itl_s', .95):.1f}ms | "
-          f"step p50 {q('engine.step_s', .5):.1f}ms  "
-          f"p95 {q('engine.step_s', .95):.1f}ms")
+    print(f"[serve] ttft  p50 {q('ttft_s', .5):.0f}ms  "
+          f"p95 {q('ttft_s', .95):.0f}ms | "
+          f"itl p50 {q('itl_s', .5):.1f}ms  "
+          f"p95 {q('itl_s', .95):.1f}ms | "
+          f"step p50 {q('step_s', .5):.1f}ms  "
+          f"p95 {q('step_s', .95):.1f}ms")
     print(f"[serve] tokens real {real} / dispatched {disp} "
           f"(padded fraction {pad:.3f}) | "
-          f"jit dispatches {c('engine.jit_dispatches')} over "
-          f"{c('engine.steps_dispatched')} steps")
-    g_swap_out = m.get("kv.swap_bytes_out")
-    if g_swap_out is not None:
-        print(f"[serve] kv: swap out {int(g_swap_out.value)}B "
-              f"in {int(m.get('kv.swap_bytes_in').value)}B | "
+          f"jit dispatches {ce('jit_dispatches')} over "
+          f"{ce('steps_dispatched')} steps")
+    kv_prefixes = ["kv." if n == "engine" else f"kv.{n}." for n in
+                   engine_names]
+    swap_out = [m.get(p + "swap_bytes_out") for p in kv_prefixes]
+    if any(g is not None for g in swap_out):
+        tot_out = sum(int(g.value) for g in swap_out if g is not None)
+        tot_in = sum(int(g.value) for g in
+                     (m.get(p + "swap_bytes_in") for p in kv_prefixes)
+                     if g is not None)
+        print(f"[serve] kv: swap out {tot_out}B in {tot_in}B | "
               f"zombies reaped {c('rm.zombies_reaped')} "
               f"recovered {c('rm.recoveries')}")
     rec = obs.recorder
@@ -213,6 +285,25 @@ def main(argv=None) -> int:
                     help="write-ahead session journal directory (requires "
                          "--paged): committed turns survive an engine "
                          "crash and restore bit-exactly after rebuild")
+    ap.add_argument("--fleet", type=int, default=1, metavar="N",
+                    help="run N paged engines behind the elastic fleet "
+                         "router (requires --paged; lanes = N * "
+                         "--max-batch)")
+    ap.add_argument("--kill", type=int, default=None, metavar="IDX",
+                    help="kill engine IDX after the first completed turn "
+                         "(requires --fleet >= 2): in-flight turns fail "
+                         "typed and are resubmitted to the survivors")
+    ap.add_argument("--drain", type=int, default=None, metavar="IDX",
+                    help="gracefully drain engine IDX after the first "
+                         "completed turn (requires --fleet >= 2): its "
+                         "sessions migrate off, no turn fails")
+    ap.add_argument("--spill-dir", default=None, metavar="DIR",
+                    help="disk spill tier below the host-RAM KV swap "
+                         "store (requires --paged; crc32-checked on "
+                         "read-back)")
+    ap.add_argument("--spill-capacity-mb", type=int, default=64,
+                    help="host-RAM swap tier capacity before LRU "
+                         "writeback to --spill-dir (default 64)")
     args = ap.parse_args(argv)
     if args.turn_timeout <= 0:
         raise SystemExit("invalid --turn-timeout: must be > 0 seconds")
@@ -221,6 +312,28 @@ def main(argv=None) -> int:
     if args.journal_dir and not args.paged:
         raise SystemExit("--journal-dir requires --paged (only paged "
                          "sessions export KV pages for the journal)")
+    if args.fleet < 1:
+        raise SystemExit("invalid --fleet: need at least one engine")
+    if args.fleet > 1 and not args.paged:
+        raise SystemExit("--fleet requires --paged (only paged sessions "
+                         "export KV pages, which is how they migrate)")
+    if args.spill_dir and not args.paged:
+        raise SystemExit("--spill-dir requires --paged (the dense engine "
+                         "has no KV swap store to tier)")
+    if args.spill_capacity_mb <= 0:
+        raise SystemExit("invalid --spill-capacity-mb: must be > 0")
+    for flag, idx in (("--kill", args.kill), ("--drain", args.drain)):
+        if idx is None:
+            continue
+        if args.fleet < 2:
+            raise SystemExit(f"{flag} requires --fleet >= 2: refusing to "
+                             f"take down the only engine")
+        if not 0 <= idx < args.fleet:
+            raise SystemExit(f"invalid {flag}: engine {idx} does not "
+                             f"exist (fleet has engines 0..{args.fleet-1})")
+    if args.kill is not None and args.kill == args.drain:
+        raise SystemExit("--kill and --drain name the same engine; "
+                         "pick one fate for it")
 
     obs = build_obs(args)
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -228,7 +341,8 @@ def main(argv=None) -> int:
     model = build(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
     engine, backend = build_backend(cfg, params, args, obs=obs)
-    lanes = args.max_batch if args.paged else args.lanes
+    fleet = backend if isinstance(backend, FleetBackend) else None
+    lanes = args.max_batch * args.fleet if args.paged else args.lanes
     rm = AgentRM(backend,
                  AgentRMConfig(lanes=lanes, detect_after_s=20.0,
                                step_deadline_s=args.step_deadline or None),
@@ -240,11 +354,13 @@ def main(argv=None) -> int:
         agent = f"agent-{i % args.agents}"
         qc = (QueueClass.INTERACTIVE, QueueClass.SUBAGENT,
               QueueClass.BACKGROUND)[i % 3]
-        handles.append((agent, rm.submit(agent, f"turn {i}: do the thing",
-                                         queue_class=qc)))
+        prompt = f"turn {i}: do the thing"
+        handles.append((agent, prompt,
+                        rm.submit(agent, prompt, queue_class=qc)))
     lat = []
-    timed_out = 0
-    for agent, h in handles:
+    timed_out = failed_over = 0
+    kill_pending, drain_pending = args.kill, args.drain
+    for agent, prompt, h in handles:
         try:
             out = h.result(timeout=args.turn_timeout)
         except TimeoutError:
@@ -259,8 +375,27 @@ def main(argv=None) -> int:
             print(f"[serve] {agent} -> TIMED OUT after "
                   f"{args.turn_timeout:.0f}s (turn aborted, blocks freed)")
             continue
+        except EngineLostError as e:
+            # typed failure from the killed engine: resubmit — the shared
+            # journal restores the session bit-exactly on a survivor
+            print(f"[serve] {agent} -> ENGINE LOST mid-turn ({e}); "
+                  f"resubmitting to the survivors")
+            h = rm.submit(agent, prompt)
+            out = h.result(timeout=args.turn_timeout)
+            failed_over += 1
         lat.append(h.turn.end - h.turn.arrival)
         print(f"[serve] {agent} -> {out[:48]}  ({lat[-1]*1000:.0f} ms)")
+        if kill_pending is not None:
+            # first turn is home: now take an engine down mid-traffic
+            fleet.kill_engine(kill_pending)
+            print(f"[serve] === killed engine{kill_pending} with "
+                  f"{args.turns - len(lat)} turns still in flight ===")
+            kill_pending = None
+        if drain_pending is not None:
+            fleet.drain(drain_pending)
+            print(f"[serve] === draining engine{drain_pending} "
+                  f"(sessions migrating off, no turn fails) ===")
+            drain_pending = None
     snap = rm.monitor.snapshot()
     lat.sort()
     pct = (f"p50 {lat[len(lat)//2]*1000:.0f}ms "
@@ -269,7 +404,7 @@ def main(argv=None) -> int:
     print(f"[serve] {args.turns} turns in {time.time()-t0:.1f}s | "
           f"{pct} | reaped {snap.zombies_reaped} "
           f"recovered {snap.recoveries}")
-    if args.paged:
+    if args.paged and fleet is None:
         st = engine.step_stats()
         print(f"[serve] megastep: {st['jit_dispatches_per_step']:.2f} "
               f"dispatches/step, padded_token_fraction "
@@ -277,13 +412,37 @@ def main(argv=None) -> int:
               f"{st['trace_buckets']} (set {st['bucket_set']}), "
               f"tp={st['tp']}, host transfer "
               f"{st['host_transfer_bytes_per_step']}B/step")
+    if fleet is not None:
+        fs = fleet.fleet_stats()
+        for name, st in fs["engines"].items():
+            total = st["blocks_in_use"] + st["blocks_free"]
+            print(f"[serve] {name}: {st['state']}, "
+                  f"{st['sessions']} sessions, "
+                  f"blocks {st['blocks_in_use']}/{total}")
+        print(f"[serve] fleet: {fs['engines_active']} active | "
+              f"lost {fs['engines_lost']} drained {fs['engines_drained']} "
+              f"| migrations sudden {fs['migrations_sudden']} "
+              f"fluid {fs['migrations_fluid']} "
+              f"aborted {fs['migrations_aborted']} "
+              f"(pages streamed {fs['pages_streamed']}) | "
+              f"sessions failed over {fs['sessions_failed_over']}"
+              + (f" | turns resubmitted {failed_over}" if failed_over
+                 else ""))
     for agent_id, clm in rm.clm.items():
         print(f"[serve] {agent_id}: ctx={clm.window_tokens} tok, "
               f"psi='{clm.psi_message()[:64]}...'")
     rm.shutdown()
     if args.paged:
-        engine.kv_stats()   # publish kv.* gauges for the summary/dump
-    print_obs_summary(obs)
+        # publish kv.* gauges for the summary/dump (every live engine)
+        if fleet is not None:
+            for mem in fleet.members:
+                if mem.alive:
+                    mem.backend.engine.kv_stats()
+        else:
+            engine.kv_stats()
+    names = ([m.backend.engine.name for m in fleet.members]
+             if fleet is not None else ["engine"])
+    print_obs_summary(obs, engine_names=names)
     if args.trace_out:
         obs.recorder.export_chrome(args.trace_out)
         print(f"[serve] chrome trace -> {args.trace_out}")

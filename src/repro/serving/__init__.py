@@ -2,20 +2,22 @@ from repro.serving.backend import (EngineBackend, PagedEngineBackend,
                                    SerializedPagedBackend, byte_tokenize)
 from repro.serving.engine import InferenceEngine, Request
 from repro.serving.errors import (EngineCrashError, EngineError,
-                                  KVPressureError, PoisonedRowError,
+                                  EngineLostError, KVPressureError,
+                                  MigrationError, PoisonedRowError,
                                   StepTimeoutError, SwapCorruptionError,
                                   SwapIOError, TransientStepError)
 from repro.serving.journal import SessionJournal
-from repro.serving.paging import (BlockAllocator, OutOfBlocksError,
-                                  PageTable, PagedInferenceEngine,
-                                  PagedKVCache, PagedRequest, SwapManager,
-                                  budget_buckets)
+from repro.serving.paging import (BlockAllocator, DiskTierKVSwapStore,
+                                  OutOfBlocksError, PageTable,
+                                  PagedInferenceEngine, PagedKVCache,
+                                  PagedRequest, SwapManager, budget_buckets)
 
 __all__ = ["EngineBackend", "PagedEngineBackend", "SerializedPagedBackend",
            "byte_tokenize", "InferenceEngine", "Request", "BlockAllocator",
-           "EngineError", "OutOfBlocksError", "PageTable",
-           "PagedInferenceEngine", "PagedKVCache", "PagedRequest",
-           "SwapManager", "budget_buckets", "EngineCrashError",
-           "KVPressureError", "PoisonedRowError", "StepTimeoutError",
+           "DiskTierKVSwapStore", "EngineError", "OutOfBlocksError",
+           "PageTable", "PagedInferenceEngine", "PagedKVCache",
+           "PagedRequest", "SwapManager", "budget_buckets",
+           "EngineCrashError", "EngineLostError", "KVPressureError",
+           "MigrationError", "PoisonedRowError", "StepTimeoutError",
            "SwapCorruptionError", "SwapIOError", "TransientStepError",
            "SessionJournal"]

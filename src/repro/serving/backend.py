@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import threading
 import zlib
-from typing import Callable
+from typing import Callable, Optional
 
 import numpy as np
 
@@ -232,6 +232,68 @@ class PagedEngineBackend(SteppableBackend):
                 self._agent_of.pop(rid, None)
                 if rid in self.engine.reqs:
                     self.engine.release(rid)
+
+    # --------------------------------------------- fleet/migration hooks
+    def victim_parkable(self, rid: int) -> bool:
+        """Degradation victim filter: only an ACTIVE sequence frees blocks
+        when parked + hibernated — a parked/swapped/queued one is already
+        cold (or not resident yet) and picking it would stall admission
+        for a full retry cycle."""
+        with self._lock:
+            req = self.engine.reqs.get(rid)
+            return req is not None and req.state == "active"
+
+    def idle_sessions(self):
+        """Sudden-migration candidate set: sessions whose turn is done and
+        whose pages are parked or swapped, as ``(agent_id, rid, resident_
+        pages)`` sorted largest-resident-first (migrating those frees the
+        most source blocks)."""
+        with self._lock:
+            out = []
+            for agent_id, rid in self.sessions.items():
+                req = self.engine.reqs.get(rid)
+                if (req is not None and req.done
+                        and req.state in ("parked", "swapped")):
+                    pages = (req.table.num_pages
+                             if req.table is not None else 0)
+                    out.append((agent_id, rid, pages))
+            out.sort(key=lambda t: -t[2])
+            return out
+
+    def evict_session(self, agent_id: str, pages=None):
+        """Source half of a migration: remove the session from this
+        backend and return its ``export_live`` payload (None if unknown
+        or mid-dispatch). ``pages`` forwards pre-assembled host pages so
+        fluid migration doesn't re-gather what it already streamed."""
+        with self._lock:
+            rid = self.sessions.get(agent_id)
+            if rid is None:
+                return None
+            payload = self.engine.export_live(rid, pages=pages)
+            if payload is None:
+                return None
+            self.engine.release(rid)
+            self.sessions.pop(agent_id, None)
+            self._agent_of.pop(rid, None)
+            return payload
+
+    def adopt_session(self, agent_id: str, payload,
+                      resume: Optional[bool] = None) -> int:
+        """Target half of a migration: import the payload (the session
+        lands SWAPPED behind the checksummed swap path) and, when its turn
+        is still in flight, queue it to resume decoding bit-exactly.
+        ``resume`` overrides the default resume-if-mid-turn: a migrated
+        turn the *middleware* had preempted must stay parked, so its own
+        ``resume_turn`` remains the single resume."""
+        with self._lock:
+            rid = self.engine.import_live(payload)
+            self.sessions[agent_id] = rid
+            self._agent_of[rid] = agent_id
+            if resume is None:
+                resume = not payload.get("done", True)
+            if resume:
+                self.engine.resume(rid)
+            return rid
 
 
 class SerializedPagedBackend(ModelBackend):

@@ -33,13 +33,24 @@ The blast-radius contract each class carries:
     the engine down and rebuilds it, restoring every live session from
     the write-ahead journal (committed turns replay bit-exactly; at most
     the in-flight turn is replayed).
+  * ``EngineLostError``     — fleet tier: one engine of a multi-engine
+    fleet died and was removed from placement. Blast radius: the in-
+    flight turns that were running on it (they fail with this type);
+    its journaled sessions fail over to survivors and resume
+    bit-exactly on their next turn. Subclasses ``EngineCrashError`` so
+    single-engine recovery code keeps treating it as fatal when there
+    is no fleet to absorb it.
+  * ``MigrationError``      — a cross-engine KV-page migration was
+    aborted (interrupted stream, source session vanished, dead target).
+    Blast radius: zero turns — the session keeps running on its source
+    engine; only the migration attempt is lost.
 """
 from __future__ import annotations
 
 __all__ = ["EngineError", "TransientStepError", "PoisonedRowError",
            "KVPressureError", "SwapIOError", "SwapCorruptionError",
-           "StepTimeoutError", "EngineCrashError", "is_transient",
-           "is_fatal"]
+           "StepTimeoutError", "EngineCrashError", "EngineLostError",
+           "MigrationError", "is_transient", "is_fatal"]
 
 
 class EngineError(RuntimeError):
@@ -76,6 +87,16 @@ class StepTimeoutError(EngineError):
 
 class EngineCrashError(EngineError):
     """The engine died; rebuild from the session journal."""
+
+
+class EngineLostError(EngineCrashError):
+    """One engine of a fleet died: its in-flight turns fail with this
+    type; its journaled sessions fail over to surviving engines."""
+
+
+class MigrationError(EngineError):
+    """A cross-engine migration was aborted; the session is unaffected
+    and keeps running on its source engine."""
 
 
 def is_transient(e: BaseException) -> bool:

@@ -11,13 +11,14 @@ The Pallas paged-attention decode kernel lives in
 """
 from repro.serving.paging.allocator import (BlockAllocator, NULL_BLOCK,
                                             OutOfBlocksError, PageTable)
+from repro.serving.paging.disktier import DiskTierKVSwapStore
 from repro.serving.paging.engine import (EngineError,
                                          PagedInferenceEngine,
                                          PagedRequest, budget_buckets)
 from repro.serving.paging.pool import PagedKVCache
 from repro.serving.paging.swap import SwapManager
 
-__all__ = ["BlockAllocator", "EngineError", "NULL_BLOCK",
-           "OutOfBlocksError", "PageTable",
+__all__ = ["BlockAllocator", "DiskTierKVSwapStore", "EngineError",
+           "NULL_BLOCK", "OutOfBlocksError", "PageTable",
            "PagedInferenceEngine", "PagedRequest", "PagedKVCache",
            "SwapManager", "budget_buckets"]

@@ -153,10 +153,16 @@ class PagedInferenceEngine:
                  swap_store: Optional[KVSwapStore] = None,
                  megastep: bool = True,
                  mesh=None,
-                 obs: Optional[Observability] = None):
+                 obs: Optional[Observability] = None,
+                 name: str = "engine"):
         assert cfg.family in ("dense", "moe", "vlm"), \
             "paged engine targets the decoder-only GQA family"
         self.cfg = cfg
+        # fleet members get distinct names ("engine0", "engine1", ...) so
+        # a shared Observability keeps per-engine metric namespaces and
+        # Perfetto track groups; the default keeps every single-engine
+        # metric name byte-identical to before
+        self.name = name
         self.model = build(cfg)
         # ---- tensor-parallel mesh (DESIGN.md §13) ------------------------
         # mesh=None is the single-device engine, bit-for-bit the PR 3/4
@@ -239,9 +245,9 @@ class PagedInferenceEngine:
         # dispatch accounting for the perf contract: jit_dispatches counts
         # jitted model calls, steps_dispatched counts step()s that ran any —
         # the megastep invariant is jit_dispatches_per_step == 1.0
-        self._c_jit = m.counter("engine.jit_dispatches")
-        self._c_steps = m.counter("engine.steps_dispatched")
-        self._c_decode_steps = m.counter("engine.decode_steps")
+        self._c_jit = m.counter(f"{name}.jit_dispatches")
+        self._c_steps = m.counter(f"{name}.steps_dispatched")
+        self._c_decode_steps = m.counter(f"{name}.decode_steps")
         # trace-bucket / padding accounting: every distinct megastep width C
         # is one XLA retrace, so len(trace_buckets) <= len(bucket_set) is
         # the recompile guard the CI smoke asserts. tokens_real counts
@@ -250,18 +256,18 @@ class PagedInferenceEngine:
         # their gap is the padding the budget packer exists to shrink.
         self.trace_buckets: set = set()
         self.compiled_buckets: set = set()   # pre-traced by compile_buckets
-        self._c_tokens_real = m.counter("engine.tokens_real")
-        self._c_tokens_disp = m.counter("engine.tokens_dispatched")
+        self._c_tokens_real = m.counter(f"{name}.tokens_real")
+        self._c_tokens_disp = m.counter(f"{name}.tokens_dispatched")
         # wall-clock latency distributions (seconds): time-to-first-token
         # per turn, the gap between consecutive output tokens of one turn,
         # and host wall time around each work-doing step. Fixed log-spaced
         # buckets + a bounded reservoir — a long-lived engine no longer
         # grows per-token Python lists forever.
-        self.h_ttft = m.histogram("engine.ttft_s", LATENCY_BUCKETS_S,
+        self.h_ttft = m.histogram(f"{name}.ttft_s", LATENCY_BUCKETS_S,
                                   reservoir=512)
-        self.h_itl = m.histogram("engine.itl_s", LATENCY_BUCKETS_S,
+        self.h_itl = m.histogram(f"{name}.itl_s", LATENCY_BUCKETS_S,
                                  reservoir=512)
-        self.h_step = m.histogram("engine.step_s", LATENCY_BUCKETS_S,
+        self.h_step = m.histogram(f"{name}.step_s", LATENCY_BUCKETS_S,
                                   reservoir=256)
         self.last_serviced: Dict[int, int] = {}   # rid -> tokens, last step
         # per-step casualty list: (rid, EngineError) — sequences whose turn
@@ -273,16 +279,16 @@ class PagedInferenceEngine:
         # rows armed for logit poisoning on their next dispatch (seeded
         # chaos injection — consumed per-rid) + fault counters (§14)
         self._poison_rids: set = set()
-        self._c_poisoned = m.counter("engine.poisoned_rows")
-        self._c_kv_aborts = m.counter("engine.kv_pressure_aborts")
-        self._c_swap_fail = m.counter("engine.swap_io_failures")
+        self._c_poisoned = m.counter(f"{name}.poisoned_rows")
+        self._c_kv_aborts = m.counter(f"{name}.kv_pressure_aborts")
+        self._c_swap_fail = m.counter(f"{name}.swap_io_failures")
 
         # flight-recorder interning (once, here — the hot path only passes
         # ints). Tracks: one engine row for megasteps, one row per batch
         # slot, one row per session (lazily, at submit).
         rec = self.obs.recorder
-        self._tr_step = rec.track("megastep", group="engine")
-        self._tr_rows = [rec.track(f"row {s}", group="engine rows")
+        self._tr_step = rec.track("megastep", group=name)
+        self._tr_rows = [rec.track(f"row {s}", group=f"{name} rows")
                          for s in range(max_batch)]
         self._sess_tracks: Dict[int, int] = {}
         self._ev_step = rec.name(
@@ -293,7 +299,7 @@ class PagedInferenceEngine:
         # Perfetto shows TP overhead next to the megastep span. Emitted
         # only when tp > 1, so single-device traces (and the obs
         # overhead gate's event volume) are byte-identical to before.
-        self._tr_coll = rec.track("collectives", group="engine")
+        self._tr_coll = rec.track("collectives", group=name)
         self._ev_psum = rec.name(
             "collective.psum",
             ("tp", "psums", "bytes_per_shard", "shard_tokens_dispatched"))
@@ -390,8 +396,10 @@ class PagedInferenceEngine:
         row per session, reused across its turns)."""
         tr = self._sess_tracks.get(rid)
         if tr is None:
+            grp = ("sessions" if self.name == "engine"
+                   else f"{self.name} sessions")
             tr = self._sess_tracks[rid] = self.obs.recorder.track(
-                f"session {rid}", group="sessions")
+                f"session {rid}", group=grp)
         return tr
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
@@ -779,14 +787,59 @@ class PagedInferenceEngine:
         enter through the swap store (checksummed), so the session comes
         back SWAPPED and its next turn wakes it through the ordinary
         demand-paging path — the same bit-exact route hibernation takes."""
+        return self.import_live(payload)
+
+    def export_live(self, rid: int, pages: Optional[tuple] = None
+                    ) -> Optional[Dict]:
+        """Mid-turn-capable superset of ``export_session``: also carries
+        the in-flight turn state (pending inputs, turn budget, done flag)
+        so a fleet can move a session whose turn is still decoding.
+        The caller must ``park`` an ACTIVE session first — the page bytes
+        are only coherent between dispatches. ``pages`` optionally
+        overrides the full gather with pre-assembled ``(k, v, n)`` host
+        pages (fluid migration streams most of them ahead of time)."""
+        req = self.reqs.get(rid)
+        if req is None or req.state == ACTIVE:
+            return None
+        if pages is not None:
+            k_pages, v_pages, n = pages
+        elif req.state == SWAPPED:
+            k_pages, v_pages, n = self.swap.store.peek(rid)
+        elif req.table is not None:
+            k_pages, v_pages = self.cache.gather(req.table)
+            n = req.table.num_tokens
+        else:
+            return None
+        return {"k_pages": np.asarray(k_pages),
+                "v_pages": np.asarray(v_pages),
+                "num_tokens": int(n), "last_tok": int(req.last_tok),
+                "out_tokens": [int(t) for t in req.out_tokens],
+                "prompt": np.asarray(req.prompt, np.int32),
+                "pending": [int(t) for t in req.pending],
+                "max_new_tokens": int(req.max_new_tokens),
+                "done": bool(req.done),
+                "fresh_turn": bool(req.fresh_turn),
+                "retain": bool(req.retain)}
+
+    def import_live(self, payload: Dict) -> int:
+        """Adopt an exported session (journal restore or cross-engine
+        migration). Pages enter through the checksummed swap store, so the
+        session lands SWAPPED; a not-done payload is mid-turn and resumes
+        decoding bit-exactly once ``resume``d. Journal payloads carry no
+        turn state and default to the between-turns shape restore_session
+        always produced."""
         rid = self._next_rid
         self._next_rid += 1
         req = PagedRequest(rid, np.asarray(payload["prompt"], np.int32),
-                           retain=True, state=SWAPPED, done=True,
-                           fresh_turn=False,
+                           max_new_tokens=int(
+                               payload.get("max_new_tokens", 16)),
+                           retain=bool(payload.get("retain", True)),
+                           state=SWAPPED,
+                           done=bool(payload.get("done", True)),
+                           fresh_turn=bool(payload.get("fresh_turn", False)),
                            last_tok=int(payload["last_tok"]))
         req.out_tokens = [int(t) for t in payload.get("out_tokens", ())]
-        req.pending = []
+        req.pending = [int(t) for t in payload.get("pending", ())]
         req.t_enqueue = req.t_queued = time.perf_counter()
         self.reqs[rid] = req
         self.swap.adopt(rid, np.asarray(payload["k_pages"]),
@@ -1212,9 +1265,12 @@ class PagedInferenceEngine:
             **self.swap.stats(),
         }
         # publish into the unified registry so metrics dumps / BENCH jsons
-        # and this dict are one derivation, never two
+        # and this dict are one derivation, never two; named fleet members
+        # publish under kv.<name>.* so engines sharing a registry don't
+        # clobber each other's gauges
         m = self.obs.metrics
+        prefix = "kv." if self.name == "engine" else f"kv.{self.name}."
         for k, v in stats.items():
             if isinstance(v, (int, float)):
-                m.gauge("kv." + k).set(float(v))
+                m.gauge(prefix + k).set(float(v))
         return stats

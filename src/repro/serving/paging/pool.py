@@ -265,6 +265,16 @@ class PagedKVCache:
         bids = np.asarray(pt.blocks, np.int32)
         return np.asarray(self.k[:, bids]), np.asarray(self.v[:, bids])
 
+    def gather_range(self, pt: PageTable, lo: int,
+                     hi: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Copy pages [lo, hi) of a sequence to host memory — the unit of
+        fluid migration. Full pages of a live session are content-frozen
+        (decode only appends past ``num_tokens``; COW ``_unshare`` swaps
+        the *tail* block id, never rewrites a full block), so streaming
+        them by index while the session keeps decoding is race-free."""
+        bids = np.asarray(pt.blocks[lo:hi], np.int32)
+        return np.asarray(self.k[:, bids]), np.asarray(self.v[:, bids])
+
     def scatter(self, k_pages: np.ndarray, v_pages: np.ndarray,
                 num_tokens: int) -> PageTable:
         """Rebind host pages to freshly allocated device blocks (swap-in),

@@ -157,7 +157,7 @@ class SwapManager:
 
     # ------------------------------------------------------------- stats
     def stats(self) -> Dict[str, int]:
-        return {
+        out = {
             "swaps_out": self.swaps_out,
             "swaps_in": self.swaps_in,
             "swap_corruptions": self.corruptions_detected,
@@ -166,3 +166,7 @@ class SwapManager:
             "swap_bytes_held": self.store.bytes_stored,
             "swapped_sessions": len(self.store),
         }
+        tiers = getattr(self.store, "tier_stats", None)
+        if tiers is not None:
+            out.update(tiers())
+        return out

@@ -1,0 +1,427 @@
+"""Elastic fleet tests (DESIGN.md §15): cross-engine journal restore,
+live KV-page migration (sudden and fluid), engine-loss failover, the
+KV-pressure rebalance hook, graceful drain, the disk tier below the
+host-RAM swap store, and the fleet fault kinds' determinism contract."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.faults import ChaosBackend, FaultPlan, FaultSpec
+from repro.faults.plan import FAULT_KINDS
+from repro.launch.mesh import make_tp_mesh
+from repro.models import build
+from repro.serving import (DiskTierKVSwapStore, EngineLostError,
+                           MigrationError, PagedEngineBackend,
+                           PagedInferenceEngine, SessionJournal,
+                           SwapCorruptionError)
+from repro.distributed.elastic import FleetBackend
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("gemma-2b").replace(remat=False)
+    model = build(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _paged(cfg, params, **kw):
+    kw.setdefault("num_blocks", 40)
+    kw.setdefault("block_size", 8)
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_len", 96)
+    return PagedInferenceEngine(cfg, params, **kw)
+
+
+def _drive(be, agents, max_steps=400):
+    """Direct drive: one turn per agent, step until all resolve."""
+    rids = {be.begin_turn(a, "", p): a for a, p in agents.items()}
+    outs, errs = {}, {}
+    for _ in range(max_steps):
+        if not rids:
+            break
+        rep = be.step()
+        for rid, err in rep.failed:
+            if rid in rids:
+                errs[rids.pop(rid)] = err
+        for rid in rep.finished:
+            if rid in rids:
+                outs[rids.pop(rid)] = be.collect(rid)
+    assert not rids, f"turns never finished: {rids}"
+    return outs, errs
+
+
+def _release_all(engine) -> int:
+    for rid in list(engine.reqs):
+        engine.release(rid)
+    return int(engine.cache.allocator.num_used)
+
+
+# ----------------------------------------------- cross-engine restore
+
+def test_journal_restore_across_differing_engines_bit_exact(setup,
+                                                            tmp_path):
+    """A session journaled on engine A (bf16 pools — the smoke config's
+    compute dtype) wakes bit-exactly on engine B with a different
+    ``max_batch``, block budget, and mesh shape (no mesh vs tp=1): the
+    journal payload is full-hkv host pages, agnostic to all of them."""
+    cfg, params = setup
+    agents = {"x": "cross engine restore " * 2}
+    t2 = {"x": "second turn payload"}
+
+    ref_be = PagedEngineBackend(_paged(cfg, params), max_new_tokens=6)
+    ref1, _ = _drive(ref_be, agents)
+    ref2, _ = _drive(ref_be, t2)
+
+    journal = SessionJournal(str(tmp_path / "xj"))
+    a = PagedEngineBackend(_paged(cfg, params), max_new_tokens=6,
+                           journal=journal)
+    got1, errs = _drive(a, agents)
+    assert not errs and got1 == ref1
+
+    # engine B: different batch width, pool size, and a tp=1 mesh
+    b = PagedEngineBackend(
+        _paged(cfg, params, max_batch=2, num_blocks=56,
+               mesh=make_tp_mesh(1)),
+        max_new_tokens=6, journal=journal)
+    got2, errs = _drive(b, t2)
+    assert not errs and got2 == ref2
+    assert _release_all(b.engine) == 0
+
+
+# ------------------------------------------------------- fluid migration
+
+def test_fluid_migration_mid_decode_bit_exact_no_leaks(setup):
+    """A session decoding a long turn fluid-migrates: pages stream while
+    it keeps serving on the source, the handoff swaps engines mid-turn,
+    tokens bitwise-match the no-migration run, and releasing everything
+    leaves zero blocks on both engines."""
+    cfg, params = setup
+    prompt = {"m": "stream me " * 4}
+    ref_be = PagedEngineBackend(_paged(cfg, params), max_new_tokens=20)
+    ref, _ = _drive(ref_be, prompt)
+
+    fleet = FleetBackend(
+        [PagedEngineBackend(_paged(cfg, params, name=f"engine{i}"),
+                            max_new_tokens=20) for i in range(2)],
+        fluid_pages_per_tick=1, fluid_handoff_pages=1)
+    ext = fleet.begin_turn("m", "", prompt["m"])
+    for _ in range(4):
+        fleet.step()
+    assert fleet.migrate("m", 1, fluid=True) == {"agent": "m",
+                                                 "mode": "fluid"}
+    outs, errs = {}, {}
+    rids = {ext: "m"}
+    for _ in range(400):
+        if not rids:
+            break
+        rep = fleet.step()
+        for rid, err in rep.failed:
+            if rid in rids:
+                errs[rids.pop(rid)] = err
+        for rid in rep.finished:
+            if rid in rids:
+                outs[rids.pop(rid)] = fleet.collect(rid)
+    assert not errs and outs == ref
+    mig = fleet.last_migration
+    assert mig.phase == "done" and mig.pages_sent > 0
+    assert fleet._home["m"] == 1
+    assert fleet.fleet_stats()["migrations_fluid"] == 1
+    assert all(_release_all(m.backend.engine) == 0 for m in fleet.members)
+
+
+def test_interrupted_fluid_migration_leaks_nothing_either_side(setup):
+    """A migration interrupt mid-stream aborts the transfer: the session
+    finishes its turn untouched on the source, the target holds nothing,
+    and both allocators drain to zero on release."""
+    cfg, params = setup
+    fleet = FleetBackend(
+        [PagedEngineBackend(_paged(cfg, params, name=f"engine{i}"),
+                            max_new_tokens=16) for i in range(2)],
+        fluid_pages_per_tick=1, fluid_handoff_pages=1)
+    ext = fleet.begin_turn("x", "", "interrupt me " * 4)
+    for _ in range(4):
+        fleet.step()
+    assert fleet.migrate("x", 1, fluid=True)
+    fleet.step()                       # stream at least one page
+    assert fleet.interrupt_migrations()
+    fleet.step()                       # the abort lands
+    assert not fleet.migration_active("x")
+    mig = fleet.last_migration
+    assert mig.phase == "aborted"
+    assert isinstance(mig.error, MigrationError)
+    assert fleet._home["x"] == 0       # session never moved
+    rids = {ext: "x"}
+    outs = {}
+    for _ in range(400):
+        if not rids:
+            break
+        rep = fleet.step()
+        for rid in rep.finished:
+            if rid in rids:
+                outs[rids.pop(rid)] = fleet.collect(rid)
+    assert outs["x"].startswith("tok:")
+    tgt = fleet.members[1].backend
+    assert not tgt.sessions and len(tgt.engine.swap.store) == 0
+    assert all(_release_all(m.backend.engine) == 0 for m in fleet.members)
+
+
+def test_sudden_migration_then_turn_bit_exact(setup, tmp_path):
+    """An idle session moves engine-to-engine in one evict->adopt and its
+    next turn is bitwise identical to never having moved."""
+    cfg, params = setup
+    agents = {"s": "sudden move " * 2}
+    t2 = {"s": "after the move"}
+    ref_be = PagedEngineBackend(_paged(cfg, params), max_new_tokens=6)
+    _drive(ref_be, agents)
+    ref2, _ = _drive(ref_be, t2)
+
+    fleet = FleetBackend(
+        [PagedEngineBackend(_paged(cfg, params, name=f"engine{i}"),
+                            max_new_tokens=6) for i in range(2)])
+    _drive(fleet, agents)
+    src = fleet._home["s"]
+    dst = 1 - src
+    res = fleet.migrate("s", dst)
+    assert res["mode"] == "sudden" and res["pages"] > 0
+    assert fleet._home["s"] == dst
+    assert fleet.members[src].backend.engine.cache.allocator.num_used == 0
+    got2, errs = _drive(fleet, t2)
+    assert not errs and got2 == ref2
+
+
+# ------------------------------------------------------------- failover
+
+def test_engine_loss_fails_inflight_typed_and_restores_bit_exact(
+        setup, tmp_path):
+    """Kill one of two engines mid-turn: its in-flight turns fail with
+    ``EngineLostError`` in that step's report, and re-submitted turns
+    restore from the shared journal on the survivor bit-exactly."""
+    cfg, params = setup
+    agents = {f"a{i}": f"failover agent {i} " * 2 for i in range(3)}
+    t2 = {a: "turn two " + a for a in agents}
+    ref_be = PagedEngineBackend(_paged(cfg, params), max_new_tokens=6)
+    _drive(ref_be, agents)
+    ref2, _ = _drive(ref_be, t2)
+
+    journal = SessionJournal(str(tmp_path / "fj"))
+    mk = lambda i: PagedEngineBackend(  # noqa: E731
+        _paged(cfg, params, name=f"engine{i}"), max_new_tokens=6,
+        journal=journal)
+    fleet = FleetBackend([mk(0), mk(1)], journal=journal)
+    _drive(fleet, agents)
+    homes = dict(fleet._home)
+    victim = max(set(homes.values()),
+                 key=lambda i: sum(1 for h in homes.values() if h == i))
+    doomed = {a for a, h in homes.items() if h == victim}
+
+    rids = {fleet.begin_turn(a, "", p): a for a, p in t2.items()}
+    assert fleet.kill_engine(victim)
+    rep = fleet.step()
+    lost = {rids[r] for r, e in rep.failed
+            if r in rids and isinstance(e, EngineLostError)}
+    assert lost == doomed              # exactly the dead engine's turns
+    assert all(isinstance(e, EngineLostError) for _, e in rep.failed)
+    for r, _ in rep.failed:
+        rids.pop(r, None)
+    outs = {}
+    for _ in range(400):
+        if not rids:
+            break
+        rep = fleet.step()
+        for rid in rep.finished:
+            if rid in rids:
+                outs[rids.pop(rid)] = fleet.collect(rid)
+    # the failed turns re-run: survivors restore the sessions bit-exactly
+    retry = {fleet.begin_turn(a, "", t2[a]): a for a in lost}
+    for _ in range(400):
+        if not retry:
+            break
+        rep = fleet.step()
+        for rid in rep.finished:
+            if rid in retry:
+                outs[retry.pop(rid)] = fleet.collect(rid)
+    assert not retry
+    assert outs == ref2
+    assert fleet.fleet_stats()["sessions_failed_over"] == len(doomed)
+    leaked = sum(_release_all(m.backend.engine)
+                 for m in fleet.members if m.alive)
+    assert leaked == 0
+
+
+def test_kill_refuses_last_engine_and_loss_hook_respects_floor(setup):
+    cfg, params = setup
+    fleet = FleetBackend(
+        [PagedEngineBackend(_paged(cfg, params, name=f"engine{i}"),
+                            max_new_tokens=4) for i in range(2)])
+    assert fleet.kill_engine(0)
+    fleet.step()
+    assert not fleet.kill_engine(1)          # never the last one
+    assert not fleet.inject_engine_loss(3)   # chaos hook: same floor
+
+
+# ------------------------------------------------- rebalance / victims
+
+def test_rebalance_for_admission_moves_victim_to_headroom(setup):
+    """The middleware's pre-degradation hook, both cases: a waiter whose
+    home holds its session gets an idle resident VICTIM migrated to the
+    engine with device headroom (freeing home blocks without hibernating
+    anyone), and a session-less agent is simply re-homed."""
+    cfg, params = setup
+    mk = lambda i, blocks: PagedEngineBackend(  # noqa: E731
+        _paged(cfg, params, name=f"engine{i}", num_blocks=blocks),
+        max_new_tokens=8, prompt_tokens=48)
+    fleet = FleetBackend([mk(0, 18), mk(1, 40)])
+    fleet._home = {"w": 0, "v": 0}     # pin both onto the small engine
+    _drive(fleet, {"w": "waiter session " * 8, "v": "victim session " * 8})
+    alloc0 = fleet.members[0].backend.engine.cache.allocator
+    free_before = alloc0.num_free
+    assert fleet.rebalance_for_admission("w", "a new long prompt " * 12)
+    assert fleet._home["v"] == 1       # the victim moved, not the waiter
+    assert fleet._home["w"] == 0
+    assert alloc0.num_free > free_before   # home actually freed blocks
+    assert fleet.fleet_stats()["rebalance_migrations"] == 1
+    # a session-less agent re-homes instead of displacing anyone
+    fleet._home["n"] = 0
+    assert fleet.rebalance_for_admission("n", "fresh agent prompt")
+    assert fleet._home["n"] == 1
+
+
+def test_victim_parkable_skips_cold_and_migrating_sessions(setup):
+    """Degradation victim selection: an ACTIVE turn is parkable; a parked
+    (already cold) one is not; a mid-migration session is hands-off even
+    while active."""
+    cfg, params = setup
+    fleet = FleetBackend(
+        [PagedEngineBackend(_paged(cfg, params, name=f"engine{i}"),
+                            max_new_tokens=30) for i in range(2)],
+        fluid_pages_per_tick=1, fluid_handoff_pages=1)
+    ext = fleet.begin_turn("p", "", "parkable while decoding " * 2)
+    for _ in range(3):
+        fleet.step()
+    assert fleet.victim_parkable(ext)
+    fleet.park_turn(ext)
+    assert not fleet.victim_parkable(ext)      # already cold
+    fleet.resume_turn(ext)
+    fleet.step()
+    assert fleet.migrate("p", 1, fluid=True)
+    assert not fleet.victim_parkable(ext)      # mid-migration: hands off
+    assert not fleet.victim_parkable(99999)    # unknown ext
+
+
+# -------------------------------------------------------------- drain
+
+def test_drain_migrates_sessions_and_empties_engine(setup):
+    cfg, params = setup
+    fleet = FleetBackend(
+        [PagedEngineBackend(_paged(cfg, params, name=f"engine{i}"),
+                            max_new_tokens=4) for i in range(2)])
+    agents = {f"d{i}": f"drain agent {i}" for i in range(3)}
+    _drive(fleet, agents)
+    victim = next(iter(set(fleet._home.values())))
+    n_there = sum(1 for h in fleet._home.values() if h == victim)
+    res = fleet.drain(victim)
+    assert res["migrated_now"] == n_there and res["complete"]
+    mem = fleet.members[victim]
+    assert mem.state == "drained" and not mem.backend.sessions
+    assert mem.backend.engine.cache.allocator.num_used == 0
+    assert all(h != victim for h in fleet._home.values())
+    with pytest.raises(ValueError):
+        fleet.drain(victim)                    # not active anymore
+    other = 1 - victim
+    with pytest.raises(ValueError):
+        fleet.drain(other)                     # last active engine
+    # drained engine is out of placement; new work lands on the other
+    got, errs = _drive(fleet, {"new": "post drain turn"})
+    assert not errs and fleet._home["new"] == other
+
+
+# ----------------------------------------------------------- disk tier
+
+def test_disk_tier_spills_verifies_and_promotes(tmp_path):
+    """Unit-level: entries past the RAM capacity spill to disk with a
+    crc32; a read-back promotes bit-identical pages; flipped bytes on
+    disk surface as ``SwapCorruptionError``."""
+    store = DiskTierKVSwapStore(str(tmp_path / "spill"),
+                                capacity_bytes=10_000)  # ~1.5 payloads
+    rng = np.random.default_rng(0)
+    payloads = {}
+    for i in range(4):
+        k = rng.standard_normal((2, 3, 8, 2, 4)).astype(np.float32)
+        v = rng.standard_normal((2, 3, 8, 2, 4)).astype(np.float32)
+        payloads[i] = (k, v)
+        store.put(i, (k, v, 24), k.nbytes + v.nbytes)
+    stats = store.tier_stats()
+    assert stats["swap_disk_sessions"] > 0          # capacity forced spill
+    assert stats["swap_ram_bytes"] <= 10_000
+    assert len(store) == 4                           # both tiers visible
+    for i, (k, v) in payloads.items():
+        got_k, got_v, n = store.peek(i)
+        assert n == 24
+        assert np.array_equal(np.asarray(got_k), k)
+        assert np.array_equal(np.asarray(got_v), v)
+    # corrupt a spilled file -> checksum failure on load
+    store2 = DiskTierKVSwapStore(str(tmp_path / "spill2"),
+                                 capacity_bytes=100)
+    k, v = payloads[0]
+    store2.put("c", (k, v, 24), k.nbytes + v.nbytes)
+    store2.put("d", (k, v, 24), k.nbytes + v.nbytes)  # evicts "c" to disk
+    path, _ = store2._disk["c"]
+    raw = bytearray(open(path, "rb").read())
+    raw[len(raw) // 2] ^= 0xFF
+    open(path, "wb").write(bytes(raw))
+    with pytest.raises(SwapCorruptionError):
+        store2.peek("c")
+
+
+def test_disk_tier_behind_engine_hibernate_wake_bit_exact(setup,
+                                                          tmp_path):
+    """Integration: sessions hibernated through a tiny-RAM disk-tier
+    store (every payload round-trips via disk) wake bit-exactly, and
+    ``kv_stats`` reports both tier sizes."""
+    cfg, params = setup
+    agents = {"h1": "hibernate me " * 2, "h2": "me too " * 2}
+    t2 = {a: "wake turn " + a for a in agents}
+    ref_be = PagedEngineBackend(_paged(cfg, params), max_new_tokens=6)
+    _drive(ref_be, agents)
+    ref2, _ = _drive(ref_be, t2)
+
+    store = DiskTierKVSwapStore(str(tmp_path / "tier"),
+                                capacity_bytes=1)   # everything spills
+    eng = _paged(cfg, params, swap_store=store)
+    be = PagedEngineBackend(eng, max_new_tokens=6)
+    _drive(be, agents)
+    for a in agents:
+        be.hibernate_session(a)
+    assert store.tier_stats()["swap_disk_sessions"] >= 1
+    ks = eng.kv_stats()
+    assert ks["swap_disk_sessions"] >= 1
+    assert "swap_ram_bytes" in ks and "swap_disk_bytes" in ks
+    got2, errs = _drive(be, t2)
+    assert not errs and got2 == ref2
+    assert _release_all(eng) == 0
+
+
+# ------------------------------------------------- fault-plan contract
+
+def test_fleet_fault_kinds_deterministic_and_noop_on_single_engine(setup):
+    """The three fleet kinds ride the same one-stream determinism
+    contract (same seed -> identical plan), and injecting them against a
+    single-engine backend is a counted no-op."""
+    kinds = ("engine_loss", "migration_interrupt", "network_delay")
+    assert FAULT_KINDS[-3:] == kinds
+    rates = {k: 0.2 for k in kinds}
+    p1 = FaultPlan.generate(seed=11, n_steps=60, rates=rates)
+    p2 = FaultPlan.generate(seed=11, n_steps=60, rates=rates)
+    assert [f.to_dict() for f in p1.faults] == \
+        [f.to_dict() for f in p2.faults]
+    assert sum(p1.counts()[k] for k in kinds) > 0
+
+    cfg, params = setup
+    be = PagedEngineBackend(_paged(cfg, params), max_new_tokens=4)
+    plan = FaultPlan([FaultSpec(0, k) for k in kinds])
+    chaos = ChaosBackend(be, plan)
+    got, errs = _drive(chaos, {"n": "no fleet here"})
+    assert not errs and got["n"].startswith("tok:")
+    assert all(chaos.injected[k] == 0 for k in kinds)   # counted no-ops
