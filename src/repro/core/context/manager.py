@@ -60,6 +60,7 @@ class ContextLifecycleManager(ContextStrategy):
         self._clock = 0             # message counter (recency basis)
         self.faults = 0
         self.fault_latency_s = 0.0
+        self.swap_latency_s = 0.0   # KV swap/disk-tier share of the above
 
     # ------------------------------------------------------------ value
     def value(self, e: Entry) -> float:
@@ -151,6 +152,19 @@ class ContextLifecycleManager(ContextStrategy):
             self.fault_latency_s += T2_ACCESS_LATENCY_S
             return text, T2_ACCESS_LATENCY_S
         return None, T2_ACCESS_LATENCY_S
+
+    def charge_swap_latency(self, seconds: float):
+        """KV swap-tier transfers (host-RAM put/pop at
+        ``KV_SWAP_LATENCY_S`` each, disk spill/read-back at the store's
+        ``disk_latency_s`` on top) are context faults on the device side
+        of the session: charge their simulated cost into the same
+        ``fault_latency_s`` ledger T1/T2 recalls use, with the swap share
+        broken out in ``swap_latency_s``."""
+        seconds = float(seconds)
+        if seconds <= 0.0:
+            return
+        self.swap_latency_s += seconds
+        self.fault_latency_s += seconds
 
     def contains_fact(self, fact: str) -> bool:
         """Key info is 'retained' if findable without a cold scan: active

@@ -117,6 +117,7 @@ class ColdStore:
 
 
 KV_SWAP_LATENCY_S = 0.05
+KV_DISK_LATENCY_S = 0.40
 
 
 class KVSwapStore:
@@ -125,7 +126,11 @@ class KVSwapStore:
 
     Stores opaque page payloads keyed by session id, with byte accounting so
     benchmarks can report swap traffic. Latency is simulated bookkeeping
-    only (``KV_SWAP_LATENCY_S`` per transfer), matching the T1/T2 stores.
+    only (``KV_SWAP_LATENCY_S`` per transfer, accumulated into
+    ``sim_latency_s``), matching the T1/T2 stores — the middleware charges
+    the per-operation delta into the owning session's CLM cost model, the
+    same ledger T1/T2 recalls use. Deeper tiers (the disk spill store)
+    charge their own, larger per-transfer cost on top.
     """
 
     def __init__(self):
@@ -135,6 +140,7 @@ class KVSwapStore:
         self.bytes_in = 0           # device -> host (swap-out traffic)
         self.bytes_out = 0          # host -> device (swap-in traffic)
         self.accesses = 0
+        self.sim_latency_s = 0.0    # simulated transfer-latency ledger
 
     def put(self, key, payload, nbytes: int):
         assert key not in self._pages, f"session {key!r} already swapped out"
@@ -143,6 +149,7 @@ class KVSwapStore:
         self.bytes_stored += nbytes
         self.bytes_in += nbytes
         self.accesses += 1
+        self.sim_latency_s += KV_SWAP_LATENCY_S
 
     def peek(self, key):
         return self._pages[key]
@@ -153,6 +160,7 @@ class KVSwapStore:
         self.bytes_stored -= nbytes
         self.bytes_out += nbytes
         self.accesses += 1
+        self.sim_latency_s += KV_SWAP_LATENCY_S
         return payload
 
     def __contains__(self, key) -> bool:
@@ -167,4 +175,5 @@ class KVSwapStore:
         Subclasses with more tiers (e.g. the disk spill store) extend
         this dict."""
         return {"swap_ram_sessions": len(self._pages),
-                "swap_ram_bytes": int(sum(self._bytes.values()))}
+                "swap_ram_bytes": int(sum(self._bytes.values())),
+                "swap_sim_latency_s": float(self.sim_latency_s)}

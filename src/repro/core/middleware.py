@@ -163,6 +163,12 @@ class AgentRMConfig:
     # hung megastep becomes a typed ``StepTimeoutError`` instead of a
     # frozen dispatcher (the wedged executor thread is abandoned)
     step_deadline_s: Optional[float] = None
+    # ---- overload autopilot (DESIGN.md §16) --------------------------
+    # an ``repro.serving.autopilot.AutopilotConfig`` (or True for the
+    # defaults) arms the SLO feedback loop on the fused dispatcher:
+    # live token-budget retuning + the brownout ladder down to typed
+    # ``BackpressureError`` sheds. None (default) = static knobs.
+    autopilot: Optional[object] = None
 
 
 class TurnHandle:
@@ -290,6 +296,7 @@ class AgentRM:
         self._c_rebalance = m.counter("rm.kv_rebalances")
         self._c_429 = m.counter("rm.rate_limit_events")
         self._c_step_timeouts = m.counter("rm.step_timeouts")
+        self._c_sheds = m.counter("rm.admissions_shed")
         self._consec_failures = 0
         self._backoff = self.cfg.step_backoff_s
         self._step_runner: Optional[_StepRunner] = None
@@ -311,6 +318,23 @@ class AgentRM:
                 self._ev_boosted, self._tr_mlfq[0], t.tid)
         self.admission = AdmissionController(self.cfg.token_rate,
                                              self.cfg.token_burst)
+        # overload autopilot (DESIGN.md §16): fused-mode only — it rides
+        # the dispatcher pass. Function-level import: repro.core must not
+        # import repro.serving at module load (backend.py imports this
+        # module), and by construction time the cycle cannot bite.
+        self.autopilot = None
+        if self.fused and self.cfg.autopilot is not None:
+            from repro.serving.autopilot import (AutopilotConfig,
+                                                 SLOAutopilot)
+            ap_cfg = (AutopilotConfig() if self.cfg.autopilot is True
+                      else self.cfg.autopilot)
+            if ap_cfg.queue_high is None:
+                ap_cfg.queue_high = 8 * self.cfg.lanes
+            self.autopilot = SLOAutopilot(ap_cfg, obs=self.obs)
+            self.autopilot.bind(backend,
+                                hibernate=self._autopilot_hibernate,
+                                rebalance=self._autopilot_rebalance,
+                                aimd=self.admission.aimd)
         self.clm: Dict[str, ContextLifecycleManager] = {}
         self.handles: Dict[int, TurnHandle] = {}
         self._prompts: Dict[int, str] = {}
@@ -333,6 +357,26 @@ class AgentRM:
         turn = Turn(agent_id=agent_id, arrival=time.monotonic(),
                     service=0.0, queue_class=queue_class, tokens=est_tokens)
         handle = TurnHandle(turn)
+        ap = self.autopilot
+        if ap is not None and ap.shedding \
+                and ap.should_shed(len(self.policy)):
+            # the brownout ladder's last rung (DESIGN.md §16): NEW
+            # admissions are refused with a typed, finite retry hint
+            # while the queue already holds enough to keep the engine
+            # fed — nothing queued, running, or parked is touched, and
+            # the trickle that sustains drain-at-capacity still lands
+            from repro.serving.errors import BackpressureError
+            with self._lock:
+                retry = ap.retry_after(
+                    self.admission.next_slot(est_tokens, time.monotonic()))
+                self._c_sheds.inc()
+                self.handles[turn.tid] = handle
+            turn.state = TurnState.FAILED
+            handle._finish(error=BackpressureError(
+                f"turn for {agent_id} shed by overload autopilot "
+                f"(rung {ap.rung}); retry after {retry:.3f}s",
+                retry_after_s=retry))
+            return handle
         rec = self.obs.recorder
         with self._lock:
             self.handles[turn.tid] = handle
@@ -368,7 +412,10 @@ class AgentRM:
             self.context_for(agent_id).hibernate(path)
         hib = getattr(self.backend, "hibernate_session", None)
         if hib is not None:
+            before = self._swap_sim_latency()
             hib(agent_id)
+            self.context_for(agent_id).charge_swap_latency(
+                self._swap_sim_latency() - before)
 
     def wake_agent(self, agent_id: str, path: Optional[str] = None):
         """Inverse tier transition: restore the CLM (if ``path`` given) and
@@ -380,7 +427,24 @@ class AgentRM:
                     physical_tokens=self.cfg.physical_tokens)
         wake = getattr(self.backend, "wake_session", None)
         if wake is not None:
+            before = self._swap_sim_latency()
             wake(agent_id)
+            self.context_for(agent_id).charge_swap_latency(
+                self._swap_sim_latency() - before)
+
+    def _swap_sim_latency(self) -> float:
+        """Sum the simulated transfer-latency ledgers of every live
+        engine's swap store (fleet/chaos wrappers included). Charged as
+        a before/after delta around hibernate/wake so swap traffic —
+        including disk-tier spills and read-backs — lands in the acting
+        agent's CLM cost model."""
+        from repro.serving.autopilot import _live_engines
+        total = 0.0
+        for eng in _live_engines(self.backend):
+            store = getattr(getattr(eng, "swap", None), "store", None)
+            if store is not None:
+                total += float(getattr(store, "sim_latency_s", 0.0))
+        return total
 
     def cancel(self, tid: int, reason: str = "cancelled by caller") -> bool:
         """Abort a turn from outside the dispatcher (e.g. a gateway-side
@@ -471,6 +535,11 @@ class AgentRM:
                 self._reap_condemned(be)
                 self._preempt_over_quantum(be, now)
                 self._admit_from_queue(be, now)
+                if self.autopilot is not None:
+                    # SLO feedback (DESIGN.md §16): read windowed p95s +
+                    # queue depth, move the brownout ladder at most one
+                    # rung, apply at most one bounded mechanism action
+                    self.autopilot.on_pass(now, len(self.policy))
                 idle = not self._running
             if idle:
                 self._wake.wait(timeout=0.02)
@@ -592,6 +661,18 @@ class AgentRM:
                     except BaseException:  # noqa: BLE001
                         pass
                     self._finish_fused(tid, error=err)
+                # parked turns hold rids into the same suspect engine:
+                # fail them too (lane/DRF were released at park), or
+                # they would resume into stale rid space — or hang
+                # forever if the engine never comes back
+                for tid, rec in list(self._parked.items()):
+                    del self._parked[tid]
+                    try:
+                        be.abort_turn(rec["rid"])
+                    except BaseException:  # noqa: BLE001
+                        pass
+                    rec["turn"].state = TurnState.FAILED
+                    self.handles[tid]._finish(error=err)
                 return
             self._c_rebuilds.inc()
             if self.obs.tracing:
@@ -789,6 +870,98 @@ class AgentRM:
                                         len(self.policy))
         for t in deferred:
             self._requeue_waiting(t, now)
+
+    # ------------------------------------------- autopilot mechanisms
+    def _peek_queued(self) -> Optional[Turn]:
+        """Head-of-queue waiter (highest-level first), skipping turns
+        cancelled while queued. Caller holds the lock."""
+        for q in self.policy.queues:
+            for t in q:
+                if t.tid not in self._cancelled_tids:
+                    return t
+        return None
+
+    def _autopilot_hibernate(self) -> bool:
+        """Brownout rung 2: cool ONE session so its KV pages become
+        reclaimable. Prefers a truly idle resident session (turn done,
+        parked — hibernating it swaps its pages out without touching any
+        live turn); only when none exists does it park the MLFQ-lowest
+        RUNNING victim, and only if someone is actually waiting (the
+        same eligibility guards as KV-pressure degradation, so a parked
+        turn can never be starved — it re-queues and rides the boost).
+        Caller holds the lock."""
+        be = self.backend
+        hib = getattr(be, "hibernate_session", None)
+        # hibernation reclaims KV blocks — if no live engine is actually
+        # short on blocks (>25% free everywhere), cooling a session frees
+        # capacity nobody is waiting for, and the gather runs on the
+        # dispatcher thread stealing step time from the drain
+        from repro.serving.autopilot import _live_engines
+        pressured = False
+        for eng in _live_engines(be):
+            alloc = getattr(getattr(eng, "cache", None), "allocator", None)
+            if alloc is not None and alloc.num_blocks > 1 \
+                    and alloc.num_free < 0.25 * (alloc.num_blocks - 1):
+                pressured = True
+                break
+        if not pressured:
+            return False
+        # never cool a session whose next turn is already queued: it
+        # would be woken (full swap-in) the moment that turn schedules,
+        # so the hibernate frees nothing and the round trip is pure
+        # thrash — under sustained overload that wake churn alone can
+        # eat the throughput the shed rung just protected
+        queued_agents = {t.agent_id for q in self.policy.queues for t in q}
+        cands: List[str] = []
+        idle = getattr(be, "idle_sessions", None)
+        if idle is not None:
+            try:
+                cands = [a for a, _rid, pages in idle()
+                         if pages > 0 and a not in queued_agents]
+            except BaseException:  # noqa: BLE001 — best-effort
+                cands = []
+        else:
+            for mem in getattr(be, "members", None) or []:
+                if not getattr(mem, "alive", True):
+                    continue
+                try:
+                    cands.extend(
+                        a for a, _rid, pages in mem.backend.idle_sessions()
+                        if pages > 0 and a not in queued_agents)
+                except BaseException:  # noqa: BLE001
+                    continue
+        if hib is not None:
+            for agent_id in cands:
+                try:
+                    hib(agent_id)
+                    return True
+                except BaseException:  # noqa: BLE001 — try the next one
+                    continue
+        head = self._peek_queued()
+        if head is None:
+            return False
+        # the running-victim fallback exists to free BLOCKS for a waiter
+        # that cannot admit; if the head waiter would admit fine, lanes —
+        # not KV — are the bottleneck and parking a decoding turn would
+        # only spike its ITL without unblocking anyone
+        can = getattr(be, "can_admit", None)
+        try:
+            if can is not None and can(head.agent_id,
+                                       self._prompts.get(head.tid, "")):
+                return False
+        except BaseException:  # noqa: BLE001 — fall through to degrade
+            pass
+        return self._degrade_for_blocks(be, head, time.monotonic())
+
+    def _autopilot_rebalance(self) -> bool:
+        """Brownout rung 3: proactive fleet rebalance for the head-of-
+        queue waiter (the reactive path only fires after ``can_admit``
+        already failed). Caller holds the lock."""
+        head = self._peek_queued()
+        if head is None:
+            return False
+        return self._rebalance_for_admission(
+            self.backend, head, self._prompts.get(head.tid, ""))
 
     def _rebalance_for_admission(self, be, nxt: Turn, prompt: str) -> bool:
         """Try the backend's fleet rebalance hook (migrate-to-least-loaded,

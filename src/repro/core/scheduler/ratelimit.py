@@ -44,17 +44,51 @@ class TokenBucket:
 
 @dataclass
 class AIMDController:
-    """Adjusts the admission rate multiplier on rate-limit feedback."""
+    """Adjusts admission backpressure on congestion feedback.
+
+    Two signals, two DIFFERENT levers — the distinction is load-bearing:
+
+    * Upstream 429s (``on_rate_limited``) mean an external quota was
+      exceeded, so OUR admission must slow: multiplicative cut to the
+      ``multiplier`` that scales every queue->engine admission's bucket
+      cost, additive recovery per clean admission. Classic AIMD.
+    * The overload autopilot's shed rung (``on_slo_breach``) means OUR
+      engine is the bottleneck. Cutting the internal multiplier here
+      would throttle the very drain that relieves the overload — a
+      congestion-collapse feedback loop (the engine idles on admission
+      tokens while breached, so it stays breached). Instead the breach
+      grows a client-facing ``shed_backoff_s`` that stretches
+      ``next_slot`` — and therefore the ``retry_after_s`` a shed
+      ``BackpressureError`` carries — while internal admission keeps
+      draining at full rate. Clean admissions decay it, so the retry
+      hint relaxes as the storm clears.
+    """
     increase: float = 0.05      # additive step per clean scan
     decrease: float = 0.5       # multiplicative cut on a rate-limit event
     floor: float = 0.1
     multiplier: float = 1.0
+    slo_breaches: int = 0       # autopilot-driven events, for observability
+    shed_backoff_s: float = 0.0         # client-facing retry stretch
+    shed_backoff_step_s: float = 0.25   # first breach's backoff
+    shed_backoff_max_s: float = 30.0    # always finite
 
     def on_rate_limited(self):
         self.multiplier = max(self.floor, self.multiplier * self.decrease)
 
+    def on_slo_breach(self):
+        """Autopilot wiring: a shed-rung SLO breach doubles the client
+        retry backoff (from ``shed_backoff_step_s``, capped) without
+        touching the internal admission multiplier."""
+        self.slo_breaches += 1
+        self.shed_backoff_s = min(
+            self.shed_backoff_max_s,
+            max(self.shed_backoff_step_s, self.shed_backoff_s * 2.0))
+
     def on_clean(self):
         self.multiplier = min(1.0, self.multiplier + self.increase)
+        self.shed_backoff_s *= 0.5
+        if self.shed_backoff_s < 1e-3:
+            self.shed_backoff_s = 0.0
 
 
 class AdmissionController:
@@ -71,4 +105,4 @@ class AdmissionController:
 
     def next_slot(self, tokens: float, now: float) -> float:
         budget = tokens / max(self.aimd.multiplier, 1e-6)
-        return self.bucket.time_until(budget, now)
+        return self.bucket.time_until(budget, now) + self.aimd.shed_backoff_s

@@ -159,6 +159,7 @@ class FleetBackend(SteppableBackend):
         self._c_member_rebuilds = m.counter("fleet.member_rebuilds")
         self._c_failover = m.counter("fleet.sessions_failed_over")
         self._c_rebalance = m.counter("fleet.rebalance_migrations")
+        self._c_affinity = m.counter("fleet.affinity_placements")
         self._g_active = m.gauge("fleet.engines_active")
         self.h_handoff = m.histogram("fleet.handoff_s", LATENCY_BUCKETS_S,
                                      reservoir=256)
@@ -230,14 +231,48 @@ class FleetBackend(SteppableBackend):
         return (-eng.cache.allocator.num_free,
                 len(eng.active) + len(eng._queue), mem.idx)
 
-    def _place(self, agent_id: str) -> int:
+    def _prefix_affinity(self, mem: FleetMember, agent_id: str,
+                         prompt: Optional[str]) -> int:
+        """Dedup-indexed prefix blocks of ``prompt`` this member's pool
+        already holds — but only when the member could actually admit the
+        turn (affinity toward a full engine would defeat load spreading).
+        Best-effort and side-effect-free; 0 for non-paged backends."""
+        if not prompt:
+            return 0
+        tok = getattr(mem.backend, "_tokenize", None)
+        probe = getattr(
+            getattr(mem.backend.engine, "cache", None),
+            "prefix_match_blocks", None)
+        if tok is None or probe is None:
+            return 0
+        try:
+            if not mem.backend.can_admit(agent_id, prompt):
+                return 0
+            return int(probe(tok(prompt)))
+        except BaseException:  # noqa: BLE001 — scoring must never fail
+            return 0
+
+    def _place_key(self, mem: FleetMember, agent_id: str,
+                   prompt: Optional[str]):
+        """Placement score, most significant first: prompt-prefix
+        affinity (a fleet sharing a system prompt co-locates with the
+        engine already holding those blocks — the prefix-dedup index
+        turns into cross-session placement signal), then KV headroom,
+        then active+queued load, then index for determinism."""
+        return (-self._prefix_affinity(mem, agent_id, prompt),
+                ) + self._load_key(mem)
+
+    def _place(self, agent_id: str, prompt: Optional[str] = None) -> int:
         midx = self._home.get(agent_id)
         if midx is not None and self.members[midx].state == M_ACTIVE:
             return midx
         cands = self._active_members()
         if not cands:
             raise EngineLostError("no active engines left for placement")
-        mem = min(cands, key=self._load_key)
+        mem = min(cands,
+                  key=lambda m: self._place_key(m, agent_id, prompt))
+        if self._prefix_affinity(mem, agent_id, prompt) > 0:
+            self._c_affinity.inc()
         if agent_id in self.displaced_agents:
             self.displaced_agents.discard(agent_id)
             self._c_failover.inc()
@@ -250,7 +285,7 @@ class FleetBackend(SteppableBackend):
     # ------------------------------------------ SteppableBackend: admit
     def begin_turn(self, agent_id: str, context: str, prompt: str) -> int:
         with self._lock:
-            midx = self._place(agent_id)
+            midx = self._place(agent_id, prompt)
             rid = self.members[midx].backend.begin_turn(
                 agent_id, context, prompt)
             return self._ext_for(midx, rid)
@@ -258,7 +293,7 @@ class FleetBackend(SteppableBackend):
     def can_admit(self, agent_id: str, prompt: str) -> bool:
         with self._lock:
             try:
-                midx = self._place(agent_id)
+                midx = self._place(agent_id, prompt)
             except EngineLostError:
                 return False
             return self.members[midx].backend.can_admit(agent_id, prompt)

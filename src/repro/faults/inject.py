@@ -160,6 +160,12 @@ class ChaosBackend(SteppableBackend):
     def wake_session(self, agent_id: str):
         self.inner.wake_session(agent_id)
 
+    def idle_sessions(self):
+        """Duck-typed pass-through so the overload autopilot's hibernate
+        rung sees the inner backend's idle candidates under chaos."""
+        hook = getattr(self.inner, "idle_sessions", None)
+        return [] if hook is None else hook()
+
     def rebuild(self) -> bool:
         # hostage blocks belong to the torn-down engine's allocator —
         # dropping the ids is correct, freeing them into the new one isn't

@@ -54,8 +54,8 @@ from repro.distributed.sharding import validate_tp
 from repro.launch.mesh import make_tp_mesh
 from repro.models import build
 from repro.obs import Observability, TraceConfig
-from repro.serving import (DiskTierKVSwapStore, EngineBackend,
-                           EngineLostError, InferenceEngine,
+from repro.serving import (BackpressureError, DiskTierKVSwapStore,
+                           EngineBackend, EngineLostError, InferenceEngine,
                            PagedEngineBackend, PagedInferenceEngine,
                            SessionJournal)
 from repro.core.middleware import TurnCancelled
@@ -304,6 +304,20 @@ def main(argv=None) -> int:
     ap.add_argument("--spill-capacity-mb", type=int, default=64,
                     help="host-RAM swap tier capacity before LRU "
                          "writeback to --spill-dir (default 64)")
+    ap.add_argument("--autopilot", action="store_true",
+                    help="closed-loop overload autopilot (requires "
+                         "--paged): retunes the megastep token budget "
+                         "within its pre-traced buckets and walks the "
+                         "brownout ladder (hibernate -> rebalance -> "
+                         "shed) on SLO breach, recovering rung by rung")
+    ap.add_argument("--slo-ttft-p95", type=float, default=2.0,
+                    metavar="SEC",
+                    help="autopilot TTFT p95 SLO in seconds "
+                         "(default 2.0; requires --autopilot)")
+    ap.add_argument("--slo-itl-p95", type=float, default=0.5,
+                    metavar="SEC",
+                    help="autopilot inter-token-latency p95 SLO in "
+                         "seconds (default 0.5; requires --autopilot)")
     args = ap.parse_args(argv)
     if args.turn_timeout <= 0:
         raise SystemExit("invalid --turn-timeout: must be > 0 seconds")
@@ -334,6 +348,12 @@ def main(argv=None) -> int:
     if args.kill is not None and args.kill == args.drain:
         raise SystemExit("--kill and --drain name the same engine; "
                          "pick one fate for it")
+    if args.autopilot and not args.paged:
+        raise SystemExit("--autopilot requires --paged (only the fused "
+                         "dispatcher runs the SLO control loop)")
+    if args.slo_ttft_p95 <= 0 or args.slo_itl_p95 <= 0:
+        raise SystemExit("invalid SLO: --slo-ttft-p95 and --slo-itl-p95 "
+                         "must be > 0 seconds")
 
     obs = build_obs(args)
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -343,9 +363,15 @@ def main(argv=None) -> int:
     engine, backend = build_backend(cfg, params, args, obs=obs)
     fleet = backend if isinstance(backend, FleetBackend) else None
     lanes = args.max_batch * args.fleet if args.paged else args.lanes
+    ap_cfg = None
+    if args.autopilot:
+        from repro.serving.autopilot import AutopilotConfig
+        ap_cfg = AutopilotConfig(slo_ttft_p95_s=args.slo_ttft_p95,
+                                 slo_itl_p95_s=args.slo_itl_p95)
     rm = AgentRM(backend,
                  AgentRMConfig(lanes=lanes, detect_after_s=20.0,
-                               step_deadline_s=args.step_deadline or None),
+                               step_deadline_s=args.step_deadline or None,
+                               autopilot=ap_cfg),
                  obs=obs)
 
     t0 = time.time()
@@ -358,11 +384,26 @@ def main(argv=None) -> int:
         handles.append((agent, prompt,
                         rm.submit(agent, prompt, queue_class=qc)))
     lat = []
-    timed_out = failed_over = 0
+    timed_out = failed_over = shed = 0
     kill_pending, drain_pending = args.kill, args.drain
     for agent, prompt, h in handles:
         try:
             out = h.result(timeout=args.turn_timeout)
+        except BackpressureError as e:
+            # overload autopilot shed this admission: back off for the
+            # advertised retry_after and resubmit once (clients own the
+            # retry; the ladder guarantees the hint is finite)
+            shed += 1
+            print(f"[serve] {agent} -> SHED by overload autopilot "
+                  f"(retry after {e.retry_after_s:.2f}s); resubmitting")
+            time.sleep(e.retry_after_s)
+            h = rm.submit(agent, prompt)
+            try:
+                out = h.result(timeout=args.turn_timeout)
+            except BackpressureError:
+                print(f"[serve] {agent} -> still shedding; giving up "
+                      f"this turn")
+                continue
         except TimeoutError:
             # abort the turn engine-side so its KV blocks are released —
             # then wait briefly for the dispatcher to apply the abort
@@ -428,6 +469,13 @@ def main(argv=None) -> int:
               f"sessions failed over {fs['sessions_failed_over']}"
               + (f" | turns resubmitted {failed_over}" if failed_over
                  else ""))
+    if rm.autopilot is not None:
+        st = rm.autopilot.stats()
+        print(f"[serve] autopilot: rung {st['rung']} "
+              f"(severity {st['severity']}/{st['max_severity']}) | "
+              f"escalations {st['escalations']} "
+              f"relaxations {st['relaxations']} | "
+              f"shed {shed} turn(s) client-side")
     for agent_id, clm in rm.clm.items():
         print(f"[serve] {agent_id}: ctx={clm.window_tokens} tok, "
               f"psi='{clm.psi_message()[:64]}...'")

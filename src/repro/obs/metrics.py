@@ -31,6 +31,8 @@ import json
 import math
 import random
 import threading
+import time
+from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -88,6 +90,10 @@ class Histogram:
 
     kind = "histogram"
 
+    # ring capacity for the recency window every histogram keeps (see
+    # ``windowed_quantile``) — bounded regardless of stream length
+    WINDOW_CAP = 512
+
     def __init__(self, name: str, bounds: Sequence[float] = LATENCY_BUCKETS_S,
                  reservoir: int = 0, seed: int = 0):
         self.name = name
@@ -105,8 +111,13 @@ class Histogram:
         self._res_cap = int(reservoir)
         self._res: List[float] = []
         self._rng = random.Random(seed)
+        # (t, v) recency ring: lifetime buckets answer "how has this run
+        # gone", the ring answers "how is it going RIGHT NOW" — the SLO
+        # autopilot's control signal. Timestamps are host perf_counter
+        # (the obs clock domain), overridable for virtual-clock callers.
+        self._win: deque = deque(maxlen=self.WINDOW_CAP)
 
-    def observe(self, v: float):
+    def observe(self, v: float, now: Optional[float] = None):
         self.counts[int(np.searchsorted(self.bounds, v, side="left"))] += 1
         self.count += 1
         self.sum += v
@@ -114,6 +125,7 @@ class Histogram:
             self.min = v
         if v > self.max:
             self.max = v
+        self._win.append((time.perf_counter() if now is None else now, v))
         if self._res_cap:
             if len(self._res) < self._res_cap:
                 self._res.append(v)
@@ -153,6 +165,25 @@ class Histogram:
         return float(min(max(lower + frac * (upper - lower), self.min),
                          self.max))
 
+    def windowed_count(self, horizon_s: float,
+                       now: Optional[float] = None) -> int:
+        """Observations recorded within the last ``horizon_s`` seconds
+        (clamped to the ring capacity — a firehose stream ages out)."""
+        t = time.perf_counter() if now is None else now
+        return sum(1 for ts, _ in self._win if ts >= t - horizon_s)
+
+    def windowed_quantile(self, q: float, horizon_s: float,
+                          now: Optional[float] = None) -> Optional[float]:
+        """q-quantile over ONLY the observations of the last ``horizon_s``
+        seconds. Returns None when the window is empty — "no signal",
+        which a feedback controller must treat as hold-not-act (an idle
+        engine's stale lifetime p95 would otherwise trip it forever)."""
+        t = time.perf_counter() if now is None else now
+        recent = [v for ts, v in self._win if ts >= t - horizon_s]
+        if not recent:
+            return None
+        return float(np.percentile(np.asarray(recent), 100.0 * q))
+
     def reset(self):
         self.counts[:] = 0
         self.count = 0
@@ -160,6 +191,7 @@ class Histogram:
         self.min = math.inf
         self.max = -math.inf
         self._res.clear()
+        self._win.clear()
 
     def snapshot(self) -> dict:
         return {

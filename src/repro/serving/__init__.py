@@ -1,18 +1,21 @@
+from repro.serving.autopilot import AutopilotConfig, SLOAutopilot
 from repro.serving.backend import (EngineBackend, PagedEngineBackend,
                                    SerializedPagedBackend, byte_tokenize)
 from repro.serving.engine import InferenceEngine, Request
-from repro.serving.errors import (EngineCrashError, EngineError,
-                                  EngineLostError, KVPressureError,
-                                  MigrationError, PoisonedRowError,
-                                  StepTimeoutError, SwapCorruptionError,
-                                  SwapIOError, TransientStepError)
+from repro.serving.errors import (BackpressureError, EngineCrashError,
+                                  EngineError, EngineLostError,
+                                  KVPressureError, MigrationError,
+                                  PoisonedRowError, StepTimeoutError,
+                                  SwapCorruptionError, SwapIOError,
+                                  TransientStepError)
 from repro.serving.journal import SessionJournal
 from repro.serving.paging import (BlockAllocator, DiskTierKVSwapStore,
                                   OutOfBlocksError, PageTable,
                                   PagedInferenceEngine, PagedKVCache,
                                   PagedRequest, SwapManager, budget_buckets)
 
-__all__ = ["EngineBackend", "PagedEngineBackend", "SerializedPagedBackend",
+__all__ = ["AutopilotConfig", "SLOAutopilot", "BackpressureError",
+           "EngineBackend", "PagedEngineBackend", "SerializedPagedBackend",
            "byte_tokenize", "InferenceEngine", "Request", "BlockAllocator",
            "DiskTierKVSwapStore", "EngineError", "OutOfBlocksError",
            "PageTable", "PagedInferenceEngine", "PagedKVCache",

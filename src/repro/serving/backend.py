@@ -164,13 +164,39 @@ class PagedEngineBackend(SteppableBackend):
         if self.engine_factory is None or self.journal is None:
             return False
         with self._lock:
-            self.engine = self.engine_factory()
-            self.sessions.clear()
-            self._agent_of.clear()
+            eng = self.engine_factory()
+            # the swap store may be shared across engine generations
+            # (chaos rebuilds): evict the dead generation's entries
+            # BEFORE restoring, or its orphaned rid-keyed payloads
+            # collide with the new engine's rid space in ``adopt``
+            purge = getattr(getattr(self.engine, "swap", None),
+                            "purge_all", None)
+            if purge is not None:
+                try:
+                    purge()
+                except BaseException:  # noqa: BLE001 — best-effort
+                    pass
+            sessions: dict = {}
+            agent_of: dict = {}
             for agent_id, payload in self.journal.load_all().items():
-                rid = self.engine.restore_session(payload)
-                self.sessions[agent_id] = rid
-                self._agent_of[rid] = agent_id
+                try:
+                    rid = eng.restore_session(payload)
+                except BaseException:  # noqa: BLE001
+                    # a corrupt/poisoned journal payload costs that ONE
+                    # session its KV (the next begin_turn starts it
+                    # fresh) — never the whole rebuild. Aborting here
+                    # used to strand the middleware's parked turns with
+                    # rids from an engine this method had already
+                    # replaced: stale handles into a reset rid space
+                    continue
+                sessions[agent_id] = rid
+                agent_of[rid] = agent_id
+            # commit only after the new engine is fully populated, so a
+            # factory failure leaves the old engine — and every parked
+            # rid pointing into it — untouched
+            self.engine = eng
+            self.sessions = sessions
+            self._agent_of = agent_of
             return True
 
     def park_turn(self, rid: int):

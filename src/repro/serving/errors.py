@@ -44,13 +44,20 @@ The blast-radius contract each class carries:
     aborted (interrupted stream, source session vanished, dead target).
     Blast radius: zero turns — the session keeps running on its source
     engine; only the migration attempt is lost.
+  * ``BackpressureError``   — the overload autopilot's shed rung
+    (DESIGN.md §16) refused a NEW admission because every softer rung
+    is exhausted and SLOs are still violated. Blast radius: only the
+    refused turn — nothing already admitted is touched. Carries a
+    finite ``retry_after_s`` (from ``AdmissionController.next_slot``)
+    so callers can back off instead of hammering the queue.
 """
 from __future__ import annotations
 
 __all__ = ["EngineError", "TransientStepError", "PoisonedRowError",
            "KVPressureError", "SwapIOError", "SwapCorruptionError",
            "StepTimeoutError", "EngineCrashError", "EngineLostError",
-           "MigrationError", "is_transient", "is_fatal"]
+           "MigrationError", "BackpressureError", "is_transient",
+           "is_fatal"]
 
 
 class EngineError(RuntimeError):
@@ -97,6 +104,19 @@ class EngineLostError(EngineCrashError):
 class MigrationError(EngineError):
     """A cross-engine migration was aborted; the session is unaffected
     and keeps running on its source engine."""
+
+
+class BackpressureError(EngineError):
+    """A new admission was shed by the overload autopilot's last rung.
+
+    Only the refused turn is affected; ``retry_after_s`` is the finite
+    number of seconds after which the admission token bucket could
+    afford the turn again (clients should back off at least that long).
+    """
+
+    def __init__(self, msg: str, retry_after_s: float = 0.0):
+        super().__init__(msg)
+        self.retry_after_s = float(retry_after_s)
 
 
 def is_transient(e: BaseException) -> bool:

@@ -30,7 +30,7 @@ from typing import Dict, Tuple
 
 import numpy as np
 
-from repro.core.context.tiers import KVSwapStore
+from repro.core.context.tiers import KV_DISK_LATENCY_S, KVSwapStore
 from repro.serving.errors import SwapCorruptionError, SwapIOError
 
 __all__ = ["DiskTierKVSwapStore"]
@@ -43,12 +43,19 @@ def _to_u8(a: np.ndarray) -> np.ndarray:
 class DiskTierKVSwapStore(KVSwapStore):
     """Two-tier swap store: host RAM with LRU writeback to a spill dir."""
 
-    def __init__(self, spill_dir: str, capacity_bytes: int = 64 << 20):
+    def __init__(self, spill_dir: str, capacity_bytes: int = 64 << 20,
+                 disk_latency_s: float = KV_DISK_LATENCY_S):
         super().__init__()
         if capacity_bytes <= 0:
             raise ValueError("capacity_bytes must be positive")
+        if disk_latency_s < 0:
+            raise ValueError("disk_latency_s must be non-negative")
         self.spill_dir = spill_dir
         self.capacity_bytes = int(capacity_bytes)
+        # simulated per-file transfer cost, charged on top of the RAM
+        # tier's KV_SWAP_LATENCY_S and fed to the CLM cost model through
+        # the shared sim_latency_s ledger
+        self.disk_latency_s = float(disk_latency_s)
         os.makedirs(spill_dir, exist_ok=True)
         # key -> (path, nbytes); dict order is spill order (oldest first)
         self._disk: Dict[object, Tuple[str, int]] = {}
@@ -56,6 +63,7 @@ class DiskTierKVSwapStore(KVSwapStore):
         self.disk_writebacks = 0
         self.disk_reads = 0
         self.disk_bytes_held = 0
+        self.disk_sim_latency_s = 0.0
 
     # ------------------------------------------------------------ tiers
     def _ram_bytes(self) -> int:
@@ -107,6 +115,8 @@ class DiskTierKVSwapStore(KVSwapStore):
             self.disk_writebacks += 1
             self.disk_bytes_held += nbytes
             self.accesses += 1
+            self.disk_sim_latency_s += self.disk_latency_s
+            self.sim_latency_s += self.disk_latency_s
 
     def _load(self, key):
         """Read a spilled payload back, crc-verified. Removes the file."""
@@ -134,6 +144,8 @@ class DiskTierKVSwapStore(KVSwapStore):
                 f"read-back (stored {meta['crc']:#010x}, got {crc:#010x})")
         self.disk_reads += 1
         self.accesses += 1
+        self.disk_sim_latency_s += self.disk_latency_s
+        self.sim_latency_s += self.disk_latency_s
         try:
             import ml_dtypes
             dtype = np.dtype(getattr(ml_dtypes, meta["dtype"], meta["dtype"]))
@@ -180,6 +192,7 @@ class DiskTierKVSwapStore(KVSwapStore):
             "swap_disk_bytes": int(self.disk_bytes_held),
             "swap_disk_writebacks": int(self.disk_writebacks),
             "swap_disk_reads": int(self.disk_reads),
+            "swap_disk_latency_s": float(self.disk_sim_latency_s),
             "swap_ram_capacity_bytes": int(self.capacity_bytes),
         })
         return out

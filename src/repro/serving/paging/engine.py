@@ -391,6 +391,42 @@ class PagedInferenceEngine:
             self.cache.set_pools(pools)
             self.compiled_buckets.add(C)
 
+    def set_token_budget(self, budget: int) -> int:
+        """Retune the per-step token budget LIVE, without retracing.
+
+        The bucket set is fixed at construction (and pre-traced by
+        ``compile_buckets``), so the only legal budgets are its members:
+        every width the packer can then emit is the smallest bucket >= the
+        packed width, which stays inside the original pre-traced set — a
+        live retune can never cause a mid-traffic XLA compile. The
+        stall-free floor (``budget >= max_batch``) still applies, so the
+        overload autopilot shrinking toward decode-first can never starve
+        an active row. Returns the budget actually installed.
+        """
+        if self.token_budget is None:
+            raise ValueError(
+                "set_token_budget requires a budgeted megastep engine "
+                "(constructed with token_budget=...)")
+        budget = int(budget)
+        if budget not in self.bucket_set:
+            raise ValueError(
+                f"budget {budget} not in the pre-traced bucket set "
+                f"{self.bucket_set}: a live retune may only move between "
+                "bucket members (anything else would retrace mid-traffic)")
+        if budget < self.max_batch:
+            raise ValueError(
+                f"budget {budget} < max_batch {self.max_batch}: the "
+                "decode-first pack needs one token per batch row")
+        self.token_budget = budget
+        self.first_chunk_cap = min(self.prefill_chunk, budget)
+        self.obs.metrics.gauge(f"{self.name}.token_budget").set(budget)
+        return budget
+
+    def budget_rungs(self) -> Tuple[int, ...]:
+        """The legal live-retune ladder, smallest first: bucket-set members
+        that satisfy the stall-free ``>= max_batch`` floor."""
+        return tuple(b for b in self.bucket_set if b >= self.max_batch)
+
     def _sess_track(self, rid: int) -> int:
         """Per-session flight-recorder track (lazily interned; one Perfetto
         row per session, reused across its turns)."""

@@ -169,6 +169,21 @@ class PagedKVCache:
             self.prefix_hits += 1
         return shared
 
+    def prefix_match_blocks(self, tokens) -> int:
+        """Side-effect-free probe: how many block-aligned *strict*-prefix
+        blocks of ``tokens`` this pool already indexes. No refcount bumps
+        and no lookup/hit counter movement — this is placement scoring
+        (fleet prefix affinity), not adoption; a later ``adopt_prefix``
+        does the real sharing."""
+        toks = np.ascontiguousarray(np.asarray(tokens, np.int32).reshape(-1))
+        k = 0
+        while (k + 1) * self.block_size <= len(toks) - 1:
+            key = toks[: (k + 1) * self.block_size].tobytes()
+            if key not in self._prefix_index:
+                break
+            k += 1
+        return k
+
     def register_prefix(self, tokens, pt: PageTable, upto_tokens: int):
         """Index ``pt``'s full blocks whose contents are exactly the first
         ``upto_tokens`` positions of ``tokens`` (prompt-only blocks; call as

@@ -136,6 +136,17 @@ class SwapManager:
         if key in self.store:
             self.store.pop(key)
 
+    def purge_all(self):
+        """Drop every payload THIS manager wrote into the (possibly
+        shared) store. Swap keys are engine-scoped rids, so when an
+        engine dies but its store outlives it (chaos rebuilds reuse one
+        store across generations), the dead generation's entries must go:
+        left behind they both leak host RAM and collide with the next
+        generation's rids — ``adopt`` would find 'session N already
+        swapped out' for a session N it never wrote."""
+        for key in list(self._crc):
+            self.discard(key)
+
     # ----------------------------------------------------------- reclaim
     def reclaim(self, n_blocks: int, exclude=None) -> int:
         """Evict LRU cold sequences until ``n_blocks`` are free (or nothing

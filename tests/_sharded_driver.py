@@ -116,6 +116,39 @@ report["hibernate"] = {
     "turn2": turn2,
 }
 
+# ---- engine-loss journal failover: commit at TP=2, restore at TP=4 ------
+# The write-ahead journal commits full-hkv host pages (export_session
+# gathers the sharded pool before serialising), so a session journaled by
+# an engine on one mesh restores bit-exactly on a survivor with a
+# DIFFERENT mesh — the fleet's engine-loss failover story beyond tp=1.
+import tempfile                                             # noqa: E402
+
+from repro.serving import SessionJournal                    # noqa: E402
+
+journal = SessionJournal(tempfile.mkdtemp())
+a = engine(mesh=make_tp_mesh(2))
+rid = a.submit(PROMPT, max_new_tokens=8, retain=True)
+a.run_to_completion()
+jf_turn1 = [int(t) for t in a.reqs[rid].out_tokens]
+payload = a.export_session(rid)
+if payload is None:             # only coherent between turns: park first
+    a.park(rid)
+    payload = a.export_session(rid)
+journal.commit("agent-x", payload)
+del a                           # the tp=2 engine "dies" with its pages
+b = engine(mesh=make_tp_mesh(4))
+restored = journal.load("agent-x")
+rid2 = b.restore_session(restored)
+b.extend(rid2, EXTEND, max_new_tokens=8)
+b.run_to_completion()
+jf_turn2 = [int(t) for t in b.reqs[rid2].out_tokens]
+report["journal_failover"] = {
+    "committed": payload is not None and restored is not None,
+    "turn1_equal": bool(jf_turn1 == ref_toks[:8]),
+    "turn2_equal": bool(jf_turn2 == ref_toks[8:]),
+    "turn2": jf_turn2,
+}
+
 # ---- recompile guard under a mesh ----------------------------------------
 # varied prompt lengths through the budgeted pack: every traced width must
 # come from the bounded pow2 bucket set, mesh or not

@@ -1,0 +1,24 @@
+"""Shared fixtures. The sharded-driver subprocess is expensive (it builds
+and drives engines at three mesh widths), so its JSON report is produced
+ONCE per test session and shared by every module that asserts over it
+(test_sharded_megastep.py for the megastep contracts, test_fleet.py for
+the cross-mesh journal-failover scenario)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="session")
+def sharded_report():
+    r = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tests", "_sharded_driver.py")],
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src"),
+             "JAX_PLATFORMS": "cpu"},
+        capture_output=True, text=True, timeout=540)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    return json.loads(r.stdout.splitlines()[-1])

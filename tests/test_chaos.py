@@ -356,6 +356,33 @@ def test_crash_mid_decode_recovers_sessions_bit_exact(setup, tmp_path):
     assert metrics.counter("rm.engine_rebuilds").value == 1
 
 
+def test_rebuild_purges_dead_generation_from_shared_swap_store(setup,
+                                                               tmp_path):
+    """Chaos rebuilds reuse ONE swap store across engine generations, and
+    swap keys are engine-scoped rids: the dead generation's entries must
+    be purged at rebuild or they leak host RAM and collide with the new
+    engine's rid space ('session N already swapped out' raised for a
+    session N the new generation never wrote)."""
+    cfg, params = setup
+    store = FaultyKVSwapStore()
+    journal = SessionJournal(str(tmp_path / "jshare"))
+    factory = lambda: _paged(cfg, params, max_batch=2,  # noqa: E731
+                             swap_store=store)
+    be = PagedEngineBackend(factory(), max_new_tokens=6,
+                            journal=journal, engine_factory=factory)
+    outs, errs = _drive(be, {"sa": "turn a", "sb": "turn b"})
+    assert not errs
+    be.hibernate_session("sa")
+    be.hibernate_session("sb")
+    assert len(store) == 2          # old generation's rid-keyed payloads
+    assert be.rebuild()
+    # exactly the two re-adopted journal payloads — the dead
+    # generation's entries are gone, and the restore did not collide
+    assert len(store) == 2
+    outs2, errs2 = _drive(be, {"sa": "turn a2", "sb": "turn b2"})
+    assert not errs2 and set(outs2) == {"sa", "sb"}
+
+
 # --------------------------------------------------- mini chaos soak
 
 def test_mini_chaos_soak_no_hangs_no_leaks_typed_failures_only(setup,

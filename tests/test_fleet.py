@@ -425,3 +425,17 @@ def test_fleet_fault_kinds_deterministic_and_noop_on_single_engine(setup):
     got, errs = _drive(chaos, {"n": "no fleet here"})
     assert not errs and got["n"].startswith("tok:")
     assert all(chaos.injected[k] == 0 for k in kinds)   # counted no-ops
+
+
+def test_engine_loss_journal_restore_tp2_to_tp4_bit_exact(sharded_report):
+    """Failover beyond tp=1: a session journaled by a tp=2 engine
+    restores bit-exactly on a tp=4 survivor. Runs in the forced-device
+    subprocess driver (tests/_sharded_driver.py, shared session fixture)
+    because XLA's device count is fixed at jax import. Journal payloads
+    are full-hkv host pages gathered from the sharded pool, so an
+    engine-loss restore is mesh-shape-agnostic by construction."""
+    jf = sharded_report["journal_failover"]
+    assert jf["committed"]
+    assert jf["turn1_equal"]
+    assert jf["turn2_equal"], (jf["turn2"],
+                               sharded_report["ref_tokens"][8:])

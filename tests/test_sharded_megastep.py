@@ -21,25 +21,15 @@ Contracts under test:
     tracebacks.
 """
 import argparse
-import json
-import os
-import subprocess
-import sys
 
 import pytest
 
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
 
 @pytest.fixture(scope="module")
-def report():
-    r = subprocess.run(
-        [sys.executable, os.path.join(REPO, "tests", "_sharded_driver.py")],
-        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src"),
-             "JAX_PLATFORMS": "cpu"},
-        capture_output=True, text=True, timeout=540)
-    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
-    return json.loads(r.stdout.splitlines()[-1])
+def report(sharded_report):
+    # the driver run is session-scoped (tests/conftest.py) so test_fleet's
+    # cross-mesh failover assertions share the same subprocess
+    return sharded_report
 
 
 def test_driver_forced_four_devices(report):
